@@ -1,0 +1,306 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's claim,
+see each docstring). Real datasets (SIFT10K/NIPS-BW/URL) are not
+redistributable offline; spectrum-matched synthetic stand-ins validate the
+paper's *relative* claims (orderings/ratios/trends). CPU container: absolute
+wall times are CPU-relative; ratios are the signal.
+"""
+from __future__ import annotations
+
+import math
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import estimator as est
+
+
+def _timed(fn, *args, reps=1, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def _gd_pair(key, d, n, corr=None, decay=1.0):
+    kA, kB = jax.random.split(key)
+    D = jnp.diag(1.0 / jnp.arange(1.0, n + 1.0) ** decay)
+    A = jax.random.normal(kA, (d, n)) @ D
+    B = A + corr * jax.random.normal(kB, (d, n)) @ D if corr is not None \
+        else jax.random.normal(kB, (d, n)) @ D
+    return A, B
+
+
+def _cone_pair(key, d, n, theta):
+    """Unit vectors from a cone of angle theta (paper Fig 2b construction)."""
+    kx, kt, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (d, 1))
+    x = x / jnp.linalg.norm(x)
+    t = jax.random.normal(kt, (d, 2 * n)) * (math.tan(theta / 2) / math.sqrt(d))
+    sign = jnp.where(jax.random.bernoulli(ks, 0.5, (2 * n,)), 1.0, -1.0)
+    y = (x + t) * sign[None, :]
+    y = y / jnp.linalg.norm(y, axis=0)
+    return y[:, :n], y[:, n:]
+
+
+def _err(A, B, factors):
+    return float(core.spectral_error(A, B, factors))
+
+
+# ---------------------------------------------------------------------------
+
+def fig2a_rescaled_jl(key):
+    """Fig 2(a): rescaled-JL dot products have lower MSE than plain JL
+    (paper: 0.053 vs 0.129 at d=1000, k=10). derived = mse_plain/mse_resc."""
+    d, k, npairs = 1000, 10, 512
+    kx, kt, ks, ka = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (d, npairs))
+    x = x / jnp.linalg.norm(x, axis=0)
+    # paper construction: y = x + t, E||t|| = tan(theta/2), theta ~ U(0.1, 3)
+    theta = jax.random.uniform(ka, (npairs,), minval=0.1, maxval=3.0)
+    t = jax.random.normal(kt, (d, npairs)) / math.sqrt(d) *         jnp.tan(theta / 2)[None, :]
+    y = x + t
+    y = y / jnp.linalg.norm(y, axis=0)
+    true = jnp.sum(x * y, axis=0)
+
+    def run():
+        s = core.sketch_summary(ks, x, y, k=k)
+        idx = jnp.arange(npairs)
+        return (est.rescaled_entries(s, idx, idx),
+                est.plain_jl_entries(s, idx, idx))
+
+    (resc, plain), us = _timed(run)
+    mse_r = float(jnp.mean((resc - true) ** 2))
+    mse_p = float(jnp.mean((plain - true) ** 2))
+    return us, mse_p / mse_r, f"mse_resc={mse_r:.4f} mse_plain={mse_p:.4f}"
+
+
+def fig2b_cone(key):
+    """Fig 2(b): ||A^TB - A~^TB~|| / ||A^TB - M~|| >= 1, growing as the cone
+    angle shrinks. derived = ratio at theta=0.2rad."""
+    d, n, k = 1000, 120, 32
+    ratios = {}
+    us_tot = 0.0
+    for theta in (0.2, 0.8, 2.0):
+        A, B = _cone_pair(jax.random.fold_in(key, int(theta * 10)), d, n, theta)
+        M = A.T @ B
+
+        def run():
+            s = core.sketch_summary(key, A, B, k=k)
+            plain = s.A_sketch.T @ s.B_sketch
+            resc = est.rescaled_matrix(s)
+            return (jnp.linalg.norm(M - plain, ord=2),
+                    jnp.linalg.norm(M - resc, ord=2))
+        (e_plain, e_resc), us = _timed(run)
+        us_tot += us
+        ratios[theta] = float(e_plain) / max(float(e_resc), 1e-12)
+    notes = " ".join(f"theta={t}:ratio={r:.2f}" for t, r in ratios.items())
+    return us_tot, ratios[0.2], notes
+
+
+def fig3a_runtime(key):
+    """Fig 3(a): one-pass SMP-PCA vs two-pass LELA wall time (paper: ~2x from
+    halved IO passes; here both matrices are in memory so the ratio reflects
+    compute only — passes over data are 1 vs 2 by construction)."""
+    d, n, r = 16384, 768, 5
+    A, B = _gd_pair(key, d, n, corr=0.3)
+    m = int(4 * n * r * math.log(n))
+    _, us_smp = _timed(lambda: core.smppca(key, A, B, r=r, k=256, m=m, T=5),
+                       reps=1)
+    _, us_lela = _timed(lambda: core.lela(key, A, B, r=r, m=m, T=5), reps=1)
+    return us_smp, us_lela / us_smp, \
+        f"smp_ms={us_smp/1e3:.0f} lela_ms={us_lela/1e3:.0f} passes=1v2"
+
+
+def fig3b_error_vs_k(key):
+    """Fig 3(b): SMP-PCA error decreases with k and beats SVD(A~^T B~)
+    (paper: 1.8x on SIFT10K, 1.1x on NIPS-BW). Synthetic stand-in:
+    SIFT-like dense image-by-feature matrix, A=B (PCA task)."""
+    r = 5
+    kk = jax.random.fold_in(key, 1)
+    feats = jax.random.normal(kk, (2000, 128)) @ \
+        jnp.diag(1.0 / jnp.arange(1.0, 129.0) ** 0.7)
+    A_s = feats
+    m = int(10 * 128 * r * math.log(128))
+    errs = {}
+    us_tot = 0.0
+    for k in (64, 128, 256):
+        res, us = _timed(lambda k=k: core.smppca(
+            kk, A_s, A_s, r=r, k=k, m=m, T=6))
+        us_tot += us
+        errs[k] = _err(A_s, A_s, res.factors)
+    sf, _ = _timed(lambda: core.sketch_svd(kk, A_s, A_s, r=r, k=128))
+    e_svd = _err(A_s, A_s, sf)
+    mono = errs[64] >= errs[256]
+    return us_tot, e_svd / errs[128], \
+        (f"err@k64={errs[64]:.3f} k128={errs[128]:.3f} k256={errs[256]:.3f} "
+         f"sketchsvd@128={e_svd:.3f} monotone={mono}")
+
+
+def table1_errors(key):
+    """Table 1: Optimal <= LELA <= SMP-PCA with small gaps (synthetic GD).
+    derived = err_smppca / err_optimal."""
+    d, n, r, k = 2000, 1000, 5, 512
+    # CPU-scale note: the paper's synthetic is n=d=1e5 where the Remark-2
+    # ratio ||A||*||B||/||A^TB||_F is benign; at n=1e3 the independent case
+    # is eta-divergent, so we add mild correlation (URL datasets are
+    # correlated cross-covariances too). See EXPERIMENTS.md.
+    A, B = _gd_pair(key, d, n, corr=0.5)
+    m = int(10 * n * r * math.log(n))
+    res, us = _timed(lambda: core.smppca(key, A, B, r=r, k=k, m=m, T=6))
+    e_smp, e_opt = core.spectral_error_vs_optimal(A, B, r, res.factors)
+    lf, _ = _timed(lambda: core.lela(key, A, B, r=r, m=m, T=6))
+    e_lela = _err(A, B, lf)
+    return us, float(e_smp) / float(e_opt), \
+        (f"optimal={float(e_opt):.4f} lela={e_lela:.4f} "
+         f"smppca={float(e_smp):.4f}")
+
+
+def fig4a_phase(key):
+    """Fig 4(a): phase transition at m = Theta(nr log n).
+    derived = err(m=0.5x) / err(m=4x)."""
+    d, n, r = 1000, 400, 3
+    kU, kV = jax.random.split(key)
+    A = jax.random.normal(kU, (d, n))
+    B = (A @ jax.random.normal(kV, (n, r)) @ jax.random.normal(
+        jax.random.fold_in(kV, 1), (r, n)) / n
+         + 0.01 * jax.random.normal(jax.random.fold_in(kV, 2), (d, n)))
+    base = n * r * math.log(n)
+    errs = {}
+    us_tot = 0.0
+    for mult in (0.5, 1.0, 4.0):
+        m = int(mult * base)
+        lf, us = _timed(lambda m=m: core.lela(key, A, B, r=r, m=m, T=8))
+        us_tot += us
+        errs[mult] = _err(A, B, lf)
+    return us_tot, errs[0.5] / errs[4.0], \
+        " ".join(f"{mu}x:{e:.3f}" for mu, e in errs.items())
+
+
+def fig4b_cone_full(key):
+    """Fig 4(b): full-pipeline (sampling+ALS) error ratio SVD(A~^TB~)/SMP-PCA
+    grows as the cone angle shrinks."""
+    d, n, r, k = 1000, 150, 3, 64
+    out = {}
+    us_tot = 0.0
+    m = int(10 * n * r * math.log(n))
+    for theta in (0.2, 1.0):
+        A, B = _cone_pair(jax.random.fold_in(key, int(theta * 10)), d, n, theta)
+        res, us = _timed(lambda A=A, B=B: core.smppca(
+            key, A, B, r=r, k=k, m=m, T=6))
+        us_tot += us
+        sf, _ = _timed(lambda A=A, B=B: core.sketch_svd(key, A, B, r=r, k=k))
+        out[theta] = _err(A, B, sf) / max(_err(A, B, res.factors), 1e-9)
+    return us_tot, out[0.2], \
+        " ".join(f"theta={t}:ratio={v:.2f}" for t, v in out.items())
+
+
+def fig4c_orthogonal(key):
+    """Fig 4(c): A_r^T B_r fails when per-matrix top subspaces are orthogonal
+    while the product's signal lives in shared lower directions."""
+    d, n, r = 600, 60, 3
+    kq, kn = jax.random.split(key)
+    Q, _ = jnp.linalg.qr(jax.random.normal(kq, (d, 3 * r)))
+    CA = jax.random.normal(jax.random.fold_in(key, 1), (r, n))
+    CB = jax.random.normal(jax.random.fold_in(key, 2), (r, n))
+    SA = jax.random.normal(jax.random.fold_in(key, 3), (r, n))
+    SB = jax.random.normal(jax.random.fold_in(key, 4), (r, n))
+    A = 3.0 * Q[:, :r] @ CA + 1.5 * Q[:, 2 * r:] @ SA + \
+        0.05 * jax.random.normal(kn, (d, n))
+    B = 3.0 * Q[:, r:2 * r] @ CB + 1.5 * Q[:, 2 * r:] @ SB + \
+        0.05 * jax.random.normal(jax.random.fold_in(kn, 1), (d, n))
+    m = int(14 * n * r * math.log(n))
+    pp, us = _timed(lambda: core.product_of_pcas(key, A, B, r))
+    e_pp = _err(A, B, pp)
+    res, _ = _timed(lambda: core.smppca(key, A, B, r=r, k=512, m=m, T=6))
+    e_smp = _err(A, B, res.factors)
+    return us, e_pp / e_smp, f"ArBr={e_pp:.3f} smppca={e_smp:.3f}"
+
+
+def grad_compression(key):
+    """Beyond-paper §3 integration: tap-path (X, dY sketches) vs A=I baseline
+    gradient compression quality. derived = cosine(tap reconstruction, true
+    grad); notes include the A=I baseline cosine — the gap shows why the
+    paper's side information (true column norms + low stable rank) matters."""
+    from repro.train import sketched_dense as sd
+    from repro.optim import grad_compression as gc
+    n_in, n_out, T = 256, 1024, 8192
+    kw, kx, kz, kp1, kp2 = jax.random.split(key, 5)
+    w_true = jax.random.normal(kw, (n_in, n_out)) * 0.05
+    pert = (jax.random.normal(kp1, (n_in, 6)) @
+            jax.random.normal(kp2, (6, n_out))) * 0.02
+    w = w_true + pert
+    z = jax.random.normal(kz, (8, T // 8, 16))
+    E = jax.random.normal(jax.random.fold_in(kx, 1), (16, n_in))
+    x = z @ E + 0.05 * jax.random.normal(kx, (8, T // 8, n_in))
+    target = x @ w_true
+    taps = sd.tap_init(n_in, n_out, 128)
+
+    def loss_fn(w, taps, x):
+        return jnp.mean((sd.sketched_dense(w, taps, x, key, 128, 1024)
+                         - target) ** 2)
+
+    def run():
+        _, dtaps, _ = jax.grad(loss_fn, argnums=(0, 1, 2))(w, taps, x)
+        return sd.decompress_tap(key, dtaps, sd.TapConfig(sketch_k=128, rank=8))
+
+    ghat, us = _timed(run)
+    dw_true = jax.grad(lambda w: jnp.mean((x @ w - target) ** 2))(w)
+    cos_t = float(jnp.sum(dw_true * ghat) /
+                  (jnp.linalg.norm(dw_true) * jnp.linalg.norm(ghat)))
+    ghat2 = gc.compress_leaf(key, dw_true,
+                             gc.CompressionConfig(rank=8, sketch_k=128))
+    cos_b = float(jnp.sum(dw_true * ghat2) /
+                  (jnp.linalg.norm(dw_true) * jnp.linalg.norm(ghat2)))
+    comm = (128 * (n_in + n_out) + n_in + n_out) / (n_in * n_out)
+    return us, cos_t, f"cos_taps={cos_t:.3f} cos_AeqI={cos_b:.3f} comm={comm:.3f}"
+
+
+def kernel_sketch_fused(key):
+    """Fused Pallas sketch kernel vs oracle (interpret mode: correctness;
+    derived = max abs err vs pure-jnp reference)."""
+    from repro.kernels import ops, ref
+    Pi = jax.random.normal(key, (128, 2048))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (2048, 512))
+    (out, norms), us = _timed(lambda: ops.sketch_fused(Pi, A))
+    out_r, n2 = ref.sketch_fused_ref(Pi, A)
+    err = float(jnp.max(jnp.abs(out - out_r)))
+    return us, err, "interpret-mode correctness"
+
+
+BENCHES = [
+    ("fig2a_rescaled_jl", fig2a_rescaled_jl),
+    ("fig2b_cone", fig2b_cone),
+    ("fig3a_runtime", fig3a_runtime),
+    ("fig3b_error_vs_k", fig3b_error_vs_k),
+    ("table1_errors", table1_errors),
+    ("fig4a_phase", fig4a_phase),
+    ("fig4b_cone_full", fig4b_cone_full),
+    ("fig4c_orthogonal", fig4c_orthogonal),
+    ("grad_compression", grad_compression),
+    ("kernel_sketch_fused", kernel_sketch_fused),
+]
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    print("name,us_per_call,derived,notes")
+    for name, fn in BENCHES:
+        try:
+            us, derived, notes = fn(jax.random.fold_in(
+                key, zlib.crc32(name.encode()) % 2**31))
+            print(f"{name},{us:.0f},{derived:.4f},{notes}", flush=True)
+        except Exception as e:   # noqa: BLE001
+            print(f"{name},nan,nan,ERROR {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

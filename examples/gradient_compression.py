@@ -1,0 +1,54 @@
+"""Ablation: SMP-PCA gradient compression in real training loops.
+
+Trains the same tiny LM three ways — uncompressed, paper tap-path
+(single-pass X/dY sketches on MLP matmuls), and the A=I grads-level
+baseline with error feedback — and prints the loss trajectories. The tap
+path tracks the uncompressed curve at ~1/3 of the gradient communication.
+
+    PYTHONPATH=src python examples/gradient_compression.py --steps 60
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import build
+from repro.optim import AdamW, warmup_cosine
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def run(compression: str, steps: int) -> list:
+    cfg = dataclasses.replace(
+        get_config("phi3-mini-3.8b").reduced(),
+        d_model=128, d_ff=256, head_dim=32,
+        sketched_mlp=(compression == "taps"))
+    model = build(cfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, batch_size=8, seq_len=64)
+    opt = AdamW(lr=warmup_cosine(3e-3, 5, steps), weight_decay=0.01)
+    trainer = Trainer(model.loss, opt, data,
+                      TrainConfig(microbatches=1, compression=compression),
+                      TrainerConfig(num_steps=steps, log_every=10_000),
+                      init_params_fn=model.init_params)
+    trainer.run()
+    return [h["loss"] for h in trainer.metrics_history]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    curves = {}
+    for mode in ("none", "taps", "lowrank"):
+        curves[mode] = run(mode, args.steps)
+        print(f"{mode:8s} first={curves[mode][0]:.3f} "
+              f"last={curves[mode][-1]:.3f}")
+    base = curves["none"][-1]
+    print(f"\nfinal-loss ratio vs uncompressed: "
+          f"taps={curves['taps'][-1]/base:.3f} "
+          f"lowrank={curves['lowrank'][-1]/base:.3f}")
+
+
+if __name__ == "__main__":
+    main()

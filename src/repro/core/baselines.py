@@ -1,0 +1,70 @@
+"""Baselines the paper compares against (Figs 3(b), 4(b), 4(c); Table 1).
+
+* ``optimal_rank_r`` — truncated SVD of the exact product (the "Optimal" rows).
+* ``sketch_svd``     — SVD(A~^T B~): sketch both matrices, then top-r SVD of
+  the product of the sketches *without materializing it* (power iteration, as
+  footnote 6 prescribes). The straightforward one-pass idea SMP-PCA beats.
+* ``product_of_pcas`` — A_r^T B_r (Fig 4(c) failure mode): rank-r PCA of each
+  matrix separately, then multiply.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch
+from repro.core.types import LowRankFactors, SketchSummary
+
+
+def optimal_rank_r(A: jax.Array, B: jax.Array, r: int) -> LowRankFactors:
+    M = A.T @ B
+    U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
+    return LowRankFactors(U[:, :r] * s[:r], Vt[:r].T)
+
+
+def _implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
+                   n_iter: int = 12) -> LowRankFactors:
+    """Top-r factors of an (n1, n2) operator given only mat-vec closures."""
+    p = min(n2, r + 8)
+    G = jax.random.normal(key, (n2, p))
+    Y = matvec(G)
+
+    def body(_, Y):
+        Q, _ = jnp.linalg.qr(Y)
+        Z, _ = jnp.linalg.qr(rmatvec(Q))
+        return matvec(Z)
+
+    Y = jax.lax.fori_loop(0, n_iter, body, Y)
+    Q, _ = jnp.linalg.qr(Y)
+    Bt = rmatvec(Q)                          # (n2, p)
+    Ub, s, Vt = jnp.linalg.svd(Bt.T, full_matrices=False)
+    return LowRankFactors(Q @ (Ub[:, :r] * s[:r]), Vt[:r].T)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "k", "method"))
+def sketch_svd(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
+               method: str = "gaussian") -> LowRankFactors:
+    """SVD(A~^T B~) via power iteration on the implicit product of sketches."""
+    k_sketch, k_pow = jax.random.split(key)
+    summary = sketch.sketch_summary(k_sketch, A, B, k, method=method)
+    As, Bs = summary.A_sketch, summary.B_sketch
+    return _implicit_topr(
+        lambda X: As.T @ (Bs @ X),
+        lambda X: Bs.T @ (As @ X),
+        As.shape[1], Bs.shape[1], r, k_pow)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def product_of_pcas(key: jax.Array, A: jax.Array, B: jax.Array,
+                    r: int) -> LowRankFactors:
+    """A_r^T B_r — what you get from two independent streaming-PCA runs."""
+    kA, kB = jax.random.split(key)
+    d, n1 = A.shape
+    Ar = _implicit_topr(lambda X: A @ X, lambda X: A.T @ X, d, n1, r, kA)
+    Br = _implicit_topr(lambda X: B @ X, lambda X: B.T @ X, d, B.shape[1], r, kB)
+    # A_r = U_A S_A V_A^T -> A_r^T B_r = V_A S_A U_A^T U_B S_B V_B^T
+    core = Ar.U.T @ Br.U                      # (r, r)
+    return LowRankFactors(Ar.V @ core, Br.V)

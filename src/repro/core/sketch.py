@@ -1,0 +1,184 @@
+"""Step 1 of SMP-PCA: one-pass sketching with side information.
+
+Computes ``A_sketch = Pi @ A``, ``B_sketch = Pi @ B`` and the exact column
+norms of A and B in a single pass over the row dimension ``d`` (the streamed
+dimension). Supports:
+
+* dense Gaussian JL (``Pi(i,j) ~ N(0, 1/k)``) — the paper's analyzed sketch,
+* SRHT (subsampled randomized Hadamard transform) — the paper's Spark choice,
+* arbitrary-order streaming: row ``i``'s sketch contribution depends only on
+  ``(key, i)``, so rows may arrive in any order (paper's streaming-log claim),
+* block-streamed single-pass accumulation (``sketch_pass``) mirroring what the
+  fused Pallas kernel does tile-by-tile on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SketchSummary
+
+
+# ---------------------------------------------------------------------------
+# Pi generation
+# ---------------------------------------------------------------------------
+
+def gaussian_pi(key: jax.Array, k: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Dense (k, d) Gaussian JL matrix with entries N(0, 1/k)."""
+    return jax.random.normal(key, (k, d), dtype) / jnp.sqrt(k).astype(dtype)
+
+
+def pi_rows(key: jax.Array, row_idx: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
+    """Columns of Pi for the given data-row indices, order independent.
+
+    Returns (len(row_idx), k): entry ``[t, :] = Pi[:, row_idx[t]]``. Each data
+    row's projection vector is a pure function of ``(key, row_index)`` so a
+    stream may deliver rows in arbitrary order and the final sketch is
+    identical (tested in tests/core/test_sketch.py).
+    """
+    def one(i):
+        return jax.random.normal(jax.random.fold_in(key, i), (k,), dtype)
+
+    return jax.vmap(one)(row_idx.astype(jnp.uint32)) / jnp.sqrt(k).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard transform (reference path; MXU-blocked version lives in
+# repro.kernels.hadamard)
+# ---------------------------------------------------------------------------
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def fwht(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Unnormalized fast Walsh-Hadamard transform along ``axis`` (len = 2^p)."""
+    x = jnp.moveaxis(x, axis, 0)
+    d = x.shape[0]
+    assert d & (d - 1) == 0, f"FWHT length must be a power of two, got {d}"
+    shape_rest = x.shape[1:]
+    h = 1
+    while h < d:
+        x = x.reshape(d // (2 * h), 2, h, *shape_rest)
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    x = x.reshape(d, *shape_rest)
+    return jnp.moveaxis(x, 0, axis)
+
+
+def srht_sketch(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
+    """SRHT sketch: sqrt(1/k) * R H D X  (R = k sampled rows, H normalized).
+
+    X: (d, n) -> (k, n). Pads d to the next power of two (zero rows do not
+    change column norms or inner products).
+    """
+    d, _ = X.shape
+    dp = _next_pow2(d)
+    key_sign, key_rows = jax.random.split(key)
+    signs = jax.random.rademacher(key_sign, (d,), dtype=X.dtype)
+    Xp = X * signs[:, None]
+    if dp != d:
+        Xp = jnp.pad(Xp, ((0, dp - d), (0, 0)))
+    HX = fwht(Xp, axis=0) / jnp.sqrt(dp).astype(X.dtype)
+    rows = jax.random.choice(key_rows, dp, (k,), replace=False)
+    return HX[rows] * jnp.sqrt(dp / k).astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# One-pass summaries
+# ---------------------------------------------------------------------------
+
+def column_norms(X: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(X.astype(jnp.float32) ** 2, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "method"))
+def sketch_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int,
+                   method: str = "gaussian") -> SketchSummary:
+    """Direct (materialized-Pi) summary; the semantic reference."""
+    if method == "gaussian":
+        d = A.shape[0]
+        Pi = gaussian_pi(key, k, d, A.dtype)
+        As, Bs = Pi @ A, Pi @ B
+    elif method == "srht":
+        As, Bs = srht_sketch(key, A, k), srht_sketch(key, B, k)
+    else:
+        raise ValueError(f"unknown sketch method {method!r}")
+    return SketchSummary(As, Bs, column_norms(A), column_norms(B))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def sketch_pass(key: jax.Array, A: jax.Array, B: jax.Array, k: int,
+                block: int = 1024) -> SketchSummary:
+    """Single streaming pass over row blocks of A and B (Gaussian Pi).
+
+    Numerically identical to ``sketch_summary(method='gaussian')`` when the
+    per-block Pi slices are the slices of one materialized Pi; here each block
+    regenerates its Pi slice from (key, block index) so the full (k, d) matrix
+    never exists — this is the memory model of the paper's streaming pass and
+    of the fused TPU kernel.
+    """
+    d = A.shape[0]
+    pad = (-d) % block
+    Ap = jnp.pad(A, ((0, pad), (0, 0)))
+    Bp = jnp.pad(B, ((0, pad), (0, 0)))
+    nblk = Ap.shape[0] // block
+    Ablk = Ap.reshape(nblk, block, -1)
+    Bblk = Bp.reshape(nblk, block, -1)
+
+    def body(carry, inputs):
+        As, Bs, na2, nb2 = carry
+        bi, Ab, Bb = inputs
+        Pi_b = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(key, i), (k,))
+        )((bi * block + jnp.arange(block)).astype(jnp.uint32)) / jnp.sqrt(k)
+        As = As + Pi_b.T @ Ab
+        Bs = Bs + Pi_b.T @ Bb
+        na2 = na2 + jnp.sum(Ab.astype(jnp.float32) ** 2, axis=0)
+        nb2 = nb2 + jnp.sum(Bb.astype(jnp.float32) ** 2, axis=0)
+        return (As, Bs, na2, nb2), None
+
+    init = (
+        jnp.zeros((k, A.shape[1]), jnp.float32),
+        jnp.zeros((k, B.shape[1]), jnp.float32),
+        jnp.zeros((A.shape[1],), jnp.float32),
+        jnp.zeros((B.shape[1],), jnp.float32),
+    )
+    (As, Bs, na2, nb2), _ = jax.lax.scan(
+        body, init, (jnp.arange(nblk), Ablk, Bblk))
+    return SketchSummary(As, Bs, jnp.sqrt(na2), jnp.sqrt(nb2))
+
+
+def streamed_rows_summary(key: jax.Array, row_idx: jax.Array,
+                          A_rows: jax.Array, B_rows: jax.Array,
+                          k: int) -> SketchSummary:
+    """Arbitrary-order streaming: rows arrive as (index, A row, B row) triples.
+
+    The result is independent of arrival order (sketching is a sum over rows).
+    """
+    P = pi_rows(key, row_idx, k)          # (t, k)
+    As = P.T @ A_rows                      # (k, n1)
+    Bs = P.T @ B_rows
+    return SketchSummary(
+        As, Bs,
+        jnp.sqrt(jnp.sum(A_rows ** 2, axis=0)),
+        jnp.sqrt(jnp.sum(B_rows ** 2, axis=0)),
+    )
+
+
+def merge_summaries(a: SketchSummary, b: SketchSummary) -> SketchSummary:
+    """Combine summaries of disjoint row shards (Spark treeAggregate combiner)."""
+    return SketchSummary(
+        a.A_sketch + b.A_sketch,
+        a.B_sketch + b.B_sketch,
+        jnp.sqrt(a.norm_A ** 2 + b.norm_A ** 2),
+        jnp.sqrt(a.norm_B ** 2 + b.norm_B ** 2),
+    )

@@ -1,0 +1,69 @@
+"""Algorithm 1: SMP-PCA — Streaming Matrix Product PCA, end to end.
+
+    summary  = one pass over (A, B)            -> sketches + column norms
+    Omega    = biased sample (Eq 1)            -> m entries
+    values   = rescaled-JL estimates (Eq 2) on Omega
+    factors  = WAltMin completion (Alg 2)      -> U (n1, r), V (n2, r)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator, sampling, sketch
+from repro.core.waltmin import waltmin as _waltmin_fn
+from repro.core.types import LowRankFactors, SampleSet, SketchSummary, SMPPCAResult
+
+
+@functools.partial(jax.jit, static_argnames=("r", "k", "m", "T", "method",
+                                              "use_splits"))
+def smppca(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
+           m: int, T: int = 10, method: str = "gaussian",
+           use_splits: bool = False) -> SMPPCAResult:
+    """Single-pass rank-r PCA of A^T B. A: (d, n1), B: (d, n2)."""
+    k_sketch, k_sample, k_als = jax.random.split(key, 3)
+    summary = sketch.sketch_summary(k_sketch, A, B, k, method=method)
+    return smppca_from_summary(
+        jax.random.fold_in(k_sample, 0), summary, r=r, m=m, T=T,
+        use_splits=use_splits)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+def smppca_from_summary(key: jax.Array, summary: SketchSummary, *, r: int,
+                        m: int, T: int = 10,
+                        use_splits: bool = False) -> SMPPCAResult:
+    """Steps 2-3 given a one-pass summary (entry point for streaming and for
+    the distributed pass, whose psum produces exactly this summary)."""
+    k_sample, k_als = jax.random.split(key)
+    samples = sampling.sample_entries(k_sample, summary.norm_A, summary.norm_B, m)
+    values = estimator.rescaled_entries(summary, samples.rows, samples.cols)
+    factors = _waltmin_fn(k_als, samples, values,
+                              summary.n1, summary.n2, r, T,
+                              norm_A=summary.norm_A, use_splits=use_splits)
+    return SMPPCAResult(factors, summary, samples, values)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers (small-n; used by tests and benchmarks)
+# ---------------------------------------------------------------------------
+
+def spectral_error(A: jax.Array, B: jax.Array,
+                   factors: LowRankFactors) -> jax.Array:
+    """|| A^T B - U V^T ||_2 / || A^T B ||_2 (dense; evaluation only)."""
+    M = A.T @ B
+    err = jnp.linalg.norm(M - factors.U @ factors.V.T, ord=2)
+    return err / jnp.linalg.norm(M, ord=2)
+
+
+def spectral_error_vs_optimal(A: jax.Array, B: jax.Array, r: int,
+                              factors: LowRankFactors) -> tuple[jax.Array, jax.Array]:
+    """(algorithm error, optimal rank-r error), both relative spectral norm."""
+    M = A.T @ B
+    nM = jnp.linalg.norm(M, ord=2)
+    U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
+    Mr = (U[:, :r] * s[:r]) @ Vt[:r]
+    return (jnp.linalg.norm(M - factors.U @ factors.V.T, ord=2) / nM,
+            jnp.linalg.norm(M - Mr, ord=2) / nM)

@@ -1,0 +1,83 @@
+"""Core pytree types for SMP-PCA.
+
+Everything is a NamedTuple so it is a natural JAX pytree, jit/pjit friendly,
+and serializable by the checkpoint layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SketchSummary(NamedTuple):
+    """One-pass summary of (A, B) per Algorithm 1 step 1.
+
+    A: (d, n1), B: (d, n2); sketches are (k, n1)/(k, n2). Column norms are the
+    paper's *side information* that powers the rescaled JL estimator.
+    """
+
+    A_sketch: jax.Array        # (k, n1) = Pi @ A
+    B_sketch: jax.Array        # (k, n2) = Pi @ B
+    norm_A: jax.Array          # (n1,)  exact column L2 norms of A
+    norm_B: jax.Array          # (n2,)  exact column L2 norms of B
+
+    @property
+    def k(self) -> int:
+        return self.A_sketch.shape[0]
+
+    @property
+    def n1(self) -> int:
+        return self.A_sketch.shape[1]
+
+    @property
+    def n2(self) -> int:
+        return self.B_sketch.shape[1]
+
+    @property
+    def frob_A(self) -> jax.Array:
+        return jnp.sqrt(jnp.sum(self.norm_A ** 2))
+
+    @property
+    def frob_B(self) -> jax.Array:
+        return jnp.sqrt(jnp.sum(self.norm_B ** 2))
+
+
+class SampleSet(NamedTuple):
+    """A static-shape COO sample of entries of the (n1 x n2) product matrix.
+
+    ``rows/cols`` index into A's / B's columns. ``q_hat`` is min(1, q_ij) used
+    for the 1/q_hat completion weights. ``mask`` marks valid entries (padding
+    allows static shapes under jit).
+    """
+
+    rows: jax.Array            # (m,) int32
+    cols: jax.Array            # (m,) int32
+    q_hat: jax.Array           # (m,) float32
+    mask: jax.Array            # (m,) bool
+
+    @property
+    def m(self) -> int:
+        return self.rows.shape[0]
+
+
+class LowRankFactors(NamedTuple):
+    """Rank-r approximation in factored form: M_hat = U @ V^T."""
+
+    U: jax.Array               # (n1, r)
+    V: jax.Array               # (n2, r)
+
+    @property
+    def r(self) -> int:
+        return self.U.shape[1]
+
+    def dense(self) -> jax.Array:
+        return self.U @ self.V.T
+
+
+class SMPPCAResult(NamedTuple):
+    factors: LowRankFactors
+    summary: SketchSummary
+    samples: SampleSet
+    sampled_values: jax.Array  # (m,) rescaled-JL estimates on Omega

@@ -1,0 +1,74 @@
+"""Deterministic synthetic data pipelines.
+
+``SyntheticLM``: batch(step) is a *pure function* of (seed, step, host) — no
+iterator state. Restarting after a failure resumes at exactly the right
+sample with zero coordination (deterministic skip-ahead; DESIGN.md §8), and
+host-sharding falls out of folding host_id into the key.
+
+The token process is learnable: a noisy affine walk over the vocab
+(next = cur*mult + 1 mod V with prob 1-noise, else uniform), so training
+loss decreasing is a meaningful integration test signal.
+
+``cooccurrence_stream``: the paper's query x ad / bag-of-words setting — a
+stream of (row, col-of-A, col-of-B) observations in ARBITRARY order, feeding
+examples/streaming_cooccurrence.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    batch_size: int            # per-host batch
+    seq_len: int
+    seed: int = 0
+    noise: float = 0.1
+    mult: int = 3
+    n_hosts: int = 1
+    host_id: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), step),
+            self.host_id)
+        k_start, k_noise, k_rand = jax.random.split(key, 3)
+        B, S, V = self.batch_size, self.seq_len, self.vocab_size
+        start = jax.random.randint(k_start, (B,), 0, V)
+        flip = jax.random.bernoulli(k_noise, self.noise, (B, S))
+        rand = jax.random.randint(k_rand, (B, S), 0, V)
+
+        def step_fn(cur, inputs):
+            f, r = inputs
+            nxt = jnp.where(f, r, (cur * self.mult + 1) % V)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step_fn, start, (flip.T, rand.T))
+        toks = jnp.concatenate([start[:, None], toks.T], axis=1)  # (B, S+1)
+        return {"tokens": toks[:, :-1].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}
+
+
+def cooccurrence_stream(seed: int, d: int, n1: int, n2: int, rank: int,
+                        chunk: int) -> Iterator[Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]]:
+    """Yields (row_ids, A_rows, B_rows) chunks in a shuffled (arbitrary)
+    order. The underlying A, B are low-rank-plus-noise so A^T B has planted
+    structure for SMP-PCA to find."""
+    rng = np.random.default_rng(seed)
+    UA = rng.normal(size=(d, rank)) / np.sqrt(rank)
+    VA = rng.normal(size=(rank, n1))
+    UB = 0.5 * UA + 0.5 * rng.normal(size=(d, rank)) / np.sqrt(rank)
+    VB = rng.normal(size=(rank, n2))
+    A = UA @ VA + 0.1 * rng.normal(size=(d, n1))
+    B = UB @ VB + 0.1 * rng.normal(size=(d, n2))
+    order = rng.permutation(d)
+    for i in range(0, d, chunk):
+        rows = order[i:i + chunk]
+        yield rows, A[rows].astype(np.float32), B[rows].astype(np.float32)

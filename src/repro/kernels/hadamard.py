@@ -1,0 +1,100 @@
+"""Blocked fast Walsh-Hadamard transform — the SRHT sketch on the MXU.
+
+The paper's Spark implementation uses SRHT (sqrt(d/k) R H D) to cut the
+sketch cost from O(ndk) to O(nd log d). A recursive butterfly FWHT is
+pointer-chasing and hostile to the TPU; instead we use the Kronecker
+factorization (Sylvester): for d = a * b with row-major index split i = p*b+j,
+
+    H_d = H_a (x) H_b   =>   H_d X = stage2( stage1(X) )
+    stage1: Y[p] = H_b @ X[p]      -- a independent (b x n) MXU matmuls
+    stage2: Z[q] = sum_p H_a[q,p] Y[p]  == H_a @ Y  viewed as (a, b*n)
+
+Both stages are dense matmuls against small constant Hadamard tiles
+(<=256x256, resident in VMEM), which run on the systolic MXU at full rate —
+this is the TPU-native adaptation of the GPU butterfly described in
+DESIGN.md §4. The SRHT sign flips (D) are fused into stage 1's input read.
+
+Cost: 2 * d * n * max(a, b) MACs; with a = b = sqrt(d) that is O(n d sqrt(d))
+MXU work but only O(n d) HBM traffic per stage — on TPU the MXU is free
+relative to HBM here (arithmetic intensity ~ b), so the matmul form beats an
+O(n d log d) scalar butterfly by keeping everything in 128x128 systolic tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Sylvester Hadamard matrix H_n (n a power of two), unnormalized."""
+    assert n & (n - 1) == 0, n
+    H = np.array([[1.0]], dtype=np.float32)
+    while H.shape[0] < n:
+        H = np.block([[H, H], [H, -H]])
+    return jnp.asarray(H, dtype)
+
+
+def _stage1_kernel(h_ref, sign_ref, x_ref, out_ref):
+    xs = x_ref[...].astype(jnp.float32) * sign_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.lax.dot_general(
+        h_ref[...], xs, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _stage2_kernel(h_ref, y_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        h_ref[...], y_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "bn", "interpret"))
+def blocked_fwht(X: jax.Array, signs: jax.Array, *, b: int = 128,
+                 bn: int = 256, interpret: bool = True) -> jax.Array:
+    """H_d @ (signs[:, None] * X), unnormalized. X: (d, n), d = a*b, both
+    powers of two, n % bn == 0 (ops.py pads)."""
+    d, n = X.shape
+    assert d % b == 0, (d, b)
+    a = d // b
+    assert a & (a - 1) == 0 and b & (b - 1) == 0, (a, b)
+    assert n % bn == 0, (n, bn)
+    Hb = hadamard_matrix(b)
+    Ha = hadamard_matrix(a)
+
+    # stage 1: per-p tile, out[p*b:(p+1)*b, :] = Hb @ (D X)[p*b:(p+1)*b, :]
+    Y = pl.pallas_call(
+        _stage1_kernel,
+        grid=(a, n // bn),
+        in_specs=[
+            pl.BlockSpec((b, b), lambda p, ni: (0, 0)),
+            pl.BlockSpec((b, 1), lambda p, ni: (p, 0)),
+            pl.BlockSpec((b, bn), lambda p, ni: (p, ni)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda p, ni: (p, ni)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=interpret,
+    )(Hb, signs.reshape(d, 1), X)
+
+    if a == 1:
+        return Y
+
+    # stage 2: combine across tiles: view Y as (a, b*n), Z = Ha @ Y_mat.
+    # The (d, n) row-major buffer *is* (a, b*n) row-major — a free reshape.
+    Ym = Y.reshape(a, b * n)
+    bm = b * bn
+    Z = pl.pallas_call(
+        _stage2_kernel,
+        grid=(b * n // bm,),
+        in_specs=[
+            pl.BlockSpec((a, a), lambda c: (0, 0)),
+            pl.BlockSpec((a, bm), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((a, bm), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((a, b * n), jnp.float32),
+        interpret=interpret,
+    )(Ha, Ym)
+    return Z.reshape(d, n)

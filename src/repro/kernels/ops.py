@@ -1,0 +1,114 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to kernel-aligned shapes, backend dispatch (compiled Pallas on
+TPU, interpret=True elsewhere — the kernel *body* runs either way so CPU CI
+validates the real TPU code path), and integration glue used by repro.core
+and the gradient compressor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import hadamard as _hadamard
+from repro.kernels import sampled_dot as _sampled_dot
+from repro.kernels import sketch_fused as _sketch_fused
+from repro.core.types import SketchSummary
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd"))
+def sketch_fused(Pi: jax.Array, A: jax.Array, *, bn: int = 256,
+                 bd: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Fused (Pi @ A, column norms) for arbitrary shapes; pads then crops.
+
+    Zero padding is exact for both outputs (zero rows/cols add nothing)."""
+    k, d = Pi.shape
+    n = A.shape[1]
+    bd_eff = min(bd, _pad_to(A, 0, 8).shape[0])
+    Ap = _pad_to(_pad_to(A, 0, bd_eff), 1, bn)
+    Pip = _pad_to(Pi, 1, bd_eff)
+    out, norm2 = _sketch_fused.sketch_fused(
+        Pip, Ap, bn=bn, bd=bd_eff, interpret=_interpret())
+    return out[:, :n], jnp.sqrt(norm2[:n])
+
+
+def sketch_summary_fused(key: jax.Array, A: jax.Array, B: jax.Array,
+                         k: int) -> SketchSummary:
+    """Drop-in kernel-backed replacement for core.sketch.sketch_summary."""
+    from repro.core.sketch import gaussian_pi
+    Pi = gaussian_pi(key, k, A.shape[0], jnp.float32)
+    As, na = sketch_fused(Pi, A)
+    Bs, nb = sketch_fused(Pi, B)
+    return SketchSummary(As, Bs, na, nb)
+
+
+@jax.jit
+def sampled_rescaled_dot(As_rows: jax.Array, Bs_rows: jax.Array,
+                         norm_A: jax.Array, norm_B: jax.Array,
+                         rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """Kernel-backed rescaled-JL estimates on Omega (row-major sketches)."""
+    return _sampled_dot.sampled_rescaled_dot(
+        As_rows, Bs_rows, norm_A, norm_B, rows, cols,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("b", "bn"))
+def blocked_fwht(X: jax.Array, signs: jax.Array, *, b: int = 128,
+                 bn: int = 256) -> jax.Array:
+    """Kernel-backed unnormalized FWHT of (signs * X); pads n, crops back."""
+    d, n = X.shape
+    assert d & (d - 1) == 0, f"pad d to a power of two first (got {d})"
+    b_eff = min(b, d)
+    Xp = _pad_to(X, 1, bn)
+    out = _hadamard.blocked_fwht(Xp, signs, b=b_eff, bn=bn,
+                                 interpret=_interpret())
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def srht_sketch_kernel(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
+    """Kernel-backed SRHT: sqrt(1/k) R H D X with the blocked-FWHT kernel."""
+    d, n = X.shape
+    dp = 1
+    while dp < d:
+        dp *= 2
+    key_sign, key_rows = jax.random.split(key)
+    signs = jax.random.rademacher(key_sign, (d,), dtype=X.dtype)
+    signs_p = jnp.pad(signs, (0, dp - d), constant_values=1)
+    Xp = jnp.pad(X, ((0, dp - d), (0, 0)))
+    HX = blocked_fwht(Xp, signs_p) / jnp.sqrt(dp)
+    rows = jax.random.choice(key_rows, dp, (k,), replace=False)
+    return HX[rows] * jnp.sqrt(dp / k)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True) -> jax.Array:
+    """Fused-attention kernel entry point. q: (B, S, H, Dh), k/v GQA
+    (B, S, Hkv, Dh); expands KV groups and folds (B, H) for the kernel."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    bq = min(128, S)
+    out = _flash.flash_attention(fold(q), fold(kf), fold(vf), causal=causal,
+                                 bq=bq, bk=bq, interpret=_interpret())
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def sketch_fused_ref(Pi: jax.Array, A: jax.Array):
+    """(Pi @ A, squared column norms)."""
+    out = Pi.astype(jnp.float32) @ A.astype(jnp.float32)
+    norm2 = jnp.sum(A.astype(jnp.float32) ** 2, axis=0)
+    return out, norm2
+
+
+def sampled_rescaled_dot_ref(As_rows: jax.Array, Bs_rows: jax.Array,
+                             norm_A: jax.Array, norm_B: jax.Array,
+                             rows: jax.Array, cols: jax.Array) -> jax.Array:
+    a = As_rows[rows].astype(jnp.float32)     # (m, k)
+    b = Bs_rows[cols].astype(jnp.float32)
+    dots = jnp.sum(a * b, axis=1)
+    sa = jnp.linalg.norm(a, axis=1)
+    sb = jnp.linalg.norm(b, axis=1)
+    return dots * norm_A[rows] * norm_B[cols] / jnp.maximum(sa * sb, _EPS)
+
+
+def blocked_fwht_ref(X: jax.Array, signs: jax.Array) -> jax.Array:
+    """Unnormalized FWHT of the sign-flipped input (butterfly reference)."""
+    from repro.core.sketch import fwht
+    return fwht(X.astype(jnp.float32) * signs[:, None].astype(jnp.float32),
+                axis=0)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Naive softmax attention oracle. q/k/v: (BH, S, Dh)."""
+    import math
+    BH, S, Dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(Dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

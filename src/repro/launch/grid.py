@@ -1,0 +1,79 @@
+"""Dry-run grid driver: every (arch x shape x mesh) cell as a subprocess
+(fresh XLA per cell, no jit-cache growth), resumable via the JSONL output.
+
+    PYTHONPATH=src python -m repro.launch.grid --out results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "xlstm-350m", "whisper-small", "phi3-mini-3.8b", "granite-3-8b",
+    "recurrentgemma-9b", "llama-3.2-vision-11b", "starcoder2-15b",
+    "moonshot-v1-16b-a3b", "mistral-large-123b", "kimi-k2-1t-a32b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def done_cells(path):
+    out = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    out.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:   # noqa: BLE001
+                    pass
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--archs", default=None, help="comma list subset")
+    ap.add_argument("--meshes", default="16x16,2x16x16")
+    args = ap.parse_args(argv)
+
+    archs = args.archs.split(",") if args.archs else ARCHS
+    meshes = args.meshes.split(",")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = done_cells(args.out)
+    cells = [(a, s, m) for a in archs for s in SHAPES for m in meshes]
+    todo = [(a, s, m) for a, s, m in cells if (a, s, m) not in done]
+    print(f"{len(todo)}/{len(cells)} cells to run", flush=True)
+
+    for i, (arch, shape, mesh) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", args.out]
+        if mesh != "16x16":
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh} ...", flush=True)
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = p.returncode == 0
+            if not ok:
+                tail = (p.stdout + p.stderr)[-2000:]
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "status": "FAIL", "error": tail}) + "\n")
+        except subprocess.TimeoutExpired:
+            with open(args.out, "a") as f:
+                f.write(json.dumps({"arch": arch, "shape": shape,
+                                    "mesh": mesh, "status": "TIMEOUT"}) + "\n")
+            ok = False
+        print(f"    -> {'ok' if ok else 'FAIL'} ({time.time()-t0:.0f}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

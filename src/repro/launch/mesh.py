@@ -1,0 +1,23 @@
+"""Production mesh builders. Functions, not module constants — importing this
+module never touches jax device state (required by the dry-run contract)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for subprocess tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """All data-parallel axes of a mesh ('pod' included when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))

@@ -1,0 +1,221 @@
+"""Attention: GQA with RoPE, chunked online-softmax (flash-style) for long
+sequences, sliding-window variants, and KV-cache decode.
+
+Memory honesty: the naive (S x S) score matrix at the assigned shapes (e.g.
+prefill_32k) is multi-GB per head; ``chunked_attention`` computes attention
+with an online-softmax scan over KV chunks so the compiled dry-run's
+memory_analysis reflects a deployable kernel schedule (this is the pure-JAX
+equivalent of flash attention; XLA fuses each chunk's matmul+softmax update).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+CHUNK_THRESHOLD = 2048       # below this, dense masked attention is cheaper
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, d: int, n_heads: int, n_kv: int, head_dim: int,
+              *, dtype=jnp.float32, bias: bool = False) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": common.dense_init(kq, d, n_heads * head_dim, dtype=dtype, bias=bias),
+        "wk": common.dense_init(kk, d, n_kv * head_dim, dtype=dtype, bias=bias),
+        "wv": common.dense_init(kv, d, n_kv * head_dim, dtype=dtype, bias=bias),
+        "wo": common.dense_init(ko, n_heads * head_dim, d, dtype=dtype, bias=bias),
+    }
+
+
+def qkv_project(p: Params, x: jax.Array, n_heads: int, n_kv: int,
+                head_dim: int, positions: jax.Array, rope_theta: float | None,
+                compute_dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    q = common.dense_apply(p["wq"], x, compute_dtype).reshape(B, S, n_heads, head_dim)
+    k = common.dense_apply(p["wk"], x, compute_dtype).reshape(B, S, n_kv, head_dim)
+    v = common.dense_apply(p["wv"], x, compute_dtype).reshape(B, S, n_kv, head_dim)
+    if rope_theta is not None:
+        q = common.apply_rope(q, positions, rope_theta)
+        k = common.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# dense masked attention (short sequences / references)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh) by group broadcast."""
+    B, S, hkv, dh = k.shape
+    rep = n_heads // hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, hkv, rep, dh)) \
+        .reshape(B, S, n_heads, dh)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: int | None = None,
+                    q_offset: int = 0, kv_valid_len: jax.Array | None = None,
+                    scores_dtype=jnp.float32) -> jax.Array:
+    """q: (B, Sq, H, Dh), k/v: (B, Skv, Hkv, Dh). Returns (B, Sq, H, Dh).
+
+    scores_dtype=bf16 halves the HBM traffic of the materialized score /
+    probability tensors (the §Perf memory-term lever); softmax statistics
+    stay in f32 via the preferred accumulator."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(scores_dtype),
+                        k.astype(scores_dtype),
+                        preferred_element_type=scores_dtype) / math.sqrt(Dh)
+    scores = scores.astype(jnp.float32) if scores_dtype == jnp.float32 \
+        else scores
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_valid_len is not None:
+        mask &= kpos < kv_valid_len
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(scores_dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK,
+                      scores_dtype=jnp.float32) -> jax.Array:
+    """Streaming attention: never materializes more than (q_chunk x kv_chunk)
+    of scores per head. q/k/v as in dense_attention, Sq == Skv == S."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq, nk = S // q_chunk, S // kv_chunk
+    scale = 1.0 / math.sqrt(Dh)
+
+    qc = q.reshape(B, nq, q_chunk, H, Dh).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,Dh)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    rep = H // Hkv
+
+    def process_q_chunk(qi, q_blk):
+        # q_blk: (B, H, qc, Dh)
+        q32 = q_blk.astype(jnp.float32) * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            kb = jnp.repeat(k_blk, rep, axis=1).astype(scores_dtype)
+            vb = jnp.repeat(v_blk, rep, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q32.astype(scores_dtype), kb,
+                           preferred_element_type=scores_dtype
+                           ).astype(jnp.float32)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None]).astype(scores_dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, H, q_chunk), _NEG_INF, jnp.float32),
+                jnp.zeros((B, H, q_chunk), jnp.float32),
+                jnp.zeros((B, H, q_chunk, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out        # (B, H, qc, Dh)
+
+    outs = jax.lax.map(lambda args: process_q_chunk(*args),
+                       (jnp.arange(nq), qc))    # (nq, B, H, qc, Dh)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None,
+              scores_dtype=jnp.float32):
+    S = q.shape[1]
+    if S <= CHUNK_THRESHOLD or S % Q_CHUNK or S % KV_CHUNK:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               scores_dtype=scores_dtype)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             scores_dtype=scores_dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Params:
+    return {"k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype)}
+
+
+def cache_update(cache: Params, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, *, ring: bool = False) -> Params:
+    """Insert (B, 1, Hkv, Dh) at position ``pos`` (ring=True wraps — used by
+    sliding-window caches whose length is the window size)."""
+    L = cache["k"].shape[1]
+    idx = (pos % L) if ring else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, idx, 0, 0))
+    return {"k": k, "v": v}
+
+
+def decode_attention(q: jax.Array, cache: Params, pos: jax.Array, *,
+                     window: int | None = None) -> jax.Array:
+    """Single-token attention against the cache. q: (B, 1, H, Dh).
+
+    For ring caches (window), every slot written so far is valid (<= pos) and
+    RoPE was already applied at insert time, so ordering inside the ring is
+    irrelevant to the softmax — only validity matters.
+    """
+    B, _, H, Dh = q.shape
+    L = cache["k"].shape[1]
+    k = _expand_kv(cache["k"], H).astype(jnp.float32)
+    v = _expand_kv(cache["v"], H).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) / math.sqrt(Dh)
+    slot = jnp.arange(L)
+    if window is None:
+        valid = slot <= pos
+    else:
+        # ring: once pos >= L every slot holds an in-window token; before
+        # that only slots <= pos have been written.
+        valid = (slot <= pos) | (pos >= L)
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,152 @@
+"""Shared layer primitives: norms, dense, RoPE, activations, embeddings.
+
+Pure-functional: ``*_init(key, ...) -> params`` and ``*_apply(params, x)``.
+Parameters are plain nested dicts; sharding rules are derived from dict paths
+in repro.dist.sharding (path-based rules keep the model code mesh-agnostic).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *,
+               dtype=jnp.float32, scale: float | None = None,
+               bias: bool = False) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    y = jax.lax.dot_general(
+        x.astype(compute_dtype), p["w"].astype(compute_dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * p["scale"].astype(jnp.float32)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32) \
+        + p["bias"].astype(jnp.float32)
+
+
+def norm_init(kind: str, d: int) -> Params:
+    return layernorm_init(d) if kind == "layernorm" else rmsnorm_init(d)
+
+
+def norm_apply(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return layernorm_apply(p, x) if kind == "layernorm" else rmsnorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                      # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((seq_len, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(angle))
+    out = out.at[:, 1::2].set(jnp.cos(angle))
+    return out
+
+
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, *, gated: bool,
+             dtype=jnp.float32, bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff, dtype=dtype, bias=bias),
+         "down": dense_init(ks[1], d_ff, d, dtype=dtype, bias=bias)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype=dtype, bias=bias)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    f = ACTIVATIONS[act]
+    up = dense_apply(p["up"], x, compute_dtype)
+    if "gate" in p:
+        h = f(dense_apply(p["gate"], x, compute_dtype)) * up
+    else:
+        h = f(up)
+    return dense_apply(p["down"], h.astype(compute_dtype), compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_apply(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_apply(p: Params, x: jax.Array,
+                  compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Tied read-out: logits = x @ table^T (vocab-sharded matmul)."""
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), p["table"].astype(compute_dtype),
+        dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)

@@ -1,0 +1,62 @@
+"""Model factory: bundles an ArchConfig with its init/loss/prefill/decode
+closures — the single entry point used by train, serve, and the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, get_config
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def init_params(self, key: jax.Array):
+        return transformer.init_params(key, self.cfg)
+
+    def param_shapes(self):
+        """Abstract param pytree (no allocation) for the dry-run."""
+        return jax.eval_shape(
+            lambda k: transformer.init_params(k, self.cfg),
+            jax.random.PRNGKey(0))
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return transformer.lm_loss(params, self.cfg, batch)
+
+    def prefill(self, params, batch: Dict[str, jax.Array], caches):
+        return transformer.lm_prefill(params, self.cfg, batch, caches)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return transformer.init_cache(self.cfg, batch_size, max_len)
+
+    def cache_shapes(self, batch_size: int, max_len: int):
+        return jax.eval_shape(
+            lambda: transformer.init_cache(self.cfg, batch_size, max_len))
+
+    def decode_step(self, params, caches, token, pos):
+        return transformer.lm_decode_step(params, self.cfg, caches, token, pos)
+
+    def aux_input_shapes(self, batch_size: int) -> Dict[str, Any]:
+        """Stub-frontend inputs (precomputed embeddings) per the assignment."""
+        cfg = self.cfg
+        out: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.enc_context, cfg.d_model), jnp.bfloat16)
+        if cfg.n_img_tokens:
+            out["img_embeds"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+
+
+def build(name_or_cfg, **overrides) -> Model:
+    cfg = (get_config(name_or_cfg) if isinstance(name_or_cfg, str)
+           else name_or_cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return Model(cfg)

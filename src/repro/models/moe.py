@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, expert-parallel sharding.
+
+Dispatch strategy (pjit/GSPMD-friendly, scales to 384 experts):
+  1. router logits -> top-k (expert ids, gates) per token;
+  2. flatten (T*k) assignments, sort by expert id;
+  3. rank-within-expert via a cumulative count over the *sorted* list; drop
+     ranks >= capacity C (static, C = ceil(T*k/E * capacity_factor));
+  4. scatter tokens into an (E, C, d) buffer — indices are unique and sorted,
+     so XLA lowers to an efficient scatter;
+  5. batched expert matmuls einsum('ecd,edf->ecf') with E sharded over the
+     "model" axis (expert parallelism);
+  6. gather back, weight by gates, add shared-expert and residual paths.
+
+The (T, E, C) one-hot dispatch einsum used by Switch/GShard is O(T*E*C) and
+intractable at E=384; the sort+scatter form is O(T*k log(T*k) + T*k*d).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = Dict[str, Any]
+
+
+def moe_init(key: jax.Array, d: int, d_ff: int, n_experts: int, *,
+             n_shared: int = 0, shared_d_ff: int | None = None,
+             gated: bool = True, dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": {"w": (jax.random.normal(kr, (d, n_experts), jnp.float32)
+                         * scale).astype(jnp.float32)},   # router stays f32
+        "w_up": (jax.random.normal(jax.random.fold_in(ke, 0),
+                                   (n_experts, d, d_ff), jnp.float32)
+                 * scale).astype(dtype),
+        "w_gate": (jax.random.normal(jax.random.fold_in(ke, 1),
+                                     (n_experts, d, d_ff), jnp.float32)
+                   * scale).astype(dtype) if gated else None,
+        "w_down": (jax.random.normal(jax.random.fold_in(ke, 2),
+                                     (n_experts, d_ff, d), jnp.float32)
+                   * (1.0 / math.sqrt(d_ff))).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared"] = common.mlp_init(
+            ks, d, (shared_d_ff or d_ff) * n_shared, gated=gated, dtype=dtype)
+    return {k: v for k, v in p.items() if v is not None}
+
+
+def moe_apply(p: Params, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25, act: str = "silu",
+              compute_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    E = p["w_up"].shape[0]
+    xt = x.reshape(T, d)
+
+    # --- routing -----------------------------------------------------------
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)                   # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based capacity assignment -------------------------------------
+    C = int(math.ceil(T * top_k / E * capacity_factor))
+    flat_e = eids.reshape(-1)                                    # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e)                                  # stable
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert on the sorted list
+    idx = jnp.arange(T * top_k, dtype=jnp.int32)
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = idx - starts[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)                 # E*C = dropped
+
+    # --- dispatch ------------------------------------------------------------
+    # Kept slots are unique; dropped assignments all collide on row E*C with a
+    # zero contribution, so scatter-add is deterministic and exact.
+    buf = jnp.zeros((E * C + 1, d), compute_dtype)
+    buf = buf.at[slot].add((xt[st] * keep[:, None]).astype(compute_dtype))
+    h = buf[:E * C].reshape(E, C, d)
+
+    # --- expert FFNs (E sharded over "model") --------------------------------
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(compute_dtype),
+                    preferred_element_type=jnp.float32)
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+        hidden = common.ACTIVATIONS[act](g) * up
+    else:
+        hidden = common.ACTIVATIONS[act](up)
+    out_e = jnp.einsum("ecf,efd->ecd", hidden.astype(compute_dtype),
+                       p["w_down"].astype(compute_dtype),
+                       preferred_element_type=jnp.float32)       # (E, C, d)
+
+    # --- combine -------------------------------------------------------------
+    out_flat = jnp.concatenate(
+        [out_e.reshape(E * C, d), jnp.zeros((1, d), jnp.float32)], axis=0)
+    back = out_flat[slot] * (sg * keep)[:, None]                 # (T*k, d)
+    out = jax.ops.segment_sum(back, st, num_segments=T)          # (T, d)
+
+    if "shared" in p:
+        out = out + common.mlp_apply(p["shared"], xt, act, compute_dtype)
+    return out.reshape(B, S, d).astype(jnp.float32), aux

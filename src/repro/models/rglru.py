@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))        (c = 8)
+
+The recurrence is a per-channel *linear* scan, so training/prefill uses
+``jax.lax.associative_scan`` (O(log S) depth — the TPU-native answer to the
+paper-era sequential CUDA scan); decode is a single fused elementwise update.
+The block is: x -> [gelu(W_gate x)] * [RG-LRU(conv1d(W_in x))] -> W_out.
+
+Sharding: the recurrence is elementwise over channels, so the lru_width axis
+shards perfectly over the "model" axis with zero recurrent communication —
+noted in DESIGN.md as the hybrid arch's TP story.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = Dict[str, Any]
+
+_C = 8.0
+CONV_K = 4
+
+
+def rglru_init(key: jax.Array, d: int, width: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    # Lambda parameterized so a in (0.9, 0.999) at sigmoid(r)=0.5 (paper init)
+    lam_init = jax.random.uniform(ks[0], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(lam_init) / (0.5 * _C)) - 1.0)  # inv softplus
+    return {
+        "w_in": common.dense_init(ks[1], d, width, dtype=dtype),
+        "w_gate_branch": common.dense_init(ks[2], d, width, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (CONV_K, width), jnp.float32)
+                   * (1.0 / math.sqrt(CONV_K))).astype(dtype),
+        "gate_r": common.dense_init(ks[4], width, width, dtype=dtype),
+        "gate_i": common.dense_init(jax.random.fold_in(ks[4], 1), width, width,
+                                    dtype=dtype),
+        "lam": lam,
+        "w_out": common.dense_init(ks[5], width, d, dtype=dtype),
+    }
+
+
+def _causal_conv(w: jax.Array, x: jax.Array,
+                 state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, kernel CONV_K. x: (B, S, W). Returns (y, new
+    state (B, CONV_K-1, W)) for streaming decode."""
+    B, S, W = x.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_K - 1, W), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+K-1, W)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(CONV_K))
+    return y, xp[:, -(CONV_K - 1):, :]
+
+
+def _gates(p: Params, xc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """log(a_t) and input gate i_t, all f32. xc: (..., W)."""
+    r = jax.nn.sigmoid(common.dense_apply(p["gate_r"], xc))
+    i = jax.nn.sigmoid(common.dense_apply(p["gate_i"], xc))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r       # (..., W), < 0
+    return log_a, i
+
+
+def rglru_seq(p: Params, x: jax.Array, h0: jax.Array | None = None,
+              compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU core. x: (B, S, W) (post-conv input).
+    Returns (y (B, S, W) f32, final state (B, W))."""
+    B, S, W = x.shape
+    log_a, gate_i = _gates(p, x.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) \
+        * gate_i * x.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_step(p: Params, x_t: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. x_t: (B, W) post-conv; h: (B, W) -> (y_t, h_new)."""
+    log_a, gate_i = _gates(p, x_t.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) \
+        * gate_i * x_t.astype(jnp.float32)
+    h_new = a * h + b
+    return h_new, h_new
+
+
+def rglru_block_seq(p: Params, x: jax.Array, compute_dtype=jnp.bfloat16
+                    ) -> jax.Array:
+    """Full block, training/prefill path (no carried state). x: (B, S, d)."""
+    gate = jax.nn.gelu(common.dense_apply(p["w_gate_branch"], x, compute_dtype))
+    xin = common.dense_apply(p["w_in"], x, compute_dtype)
+    xc, _ = _causal_conv(p["conv_w"].astype(jnp.float32), xin)
+    y, _ = rglru_seq(p, xc, compute_dtype=compute_dtype)
+    return common.dense_apply(p["w_out"], (y * gate).astype(compute_dtype),
+                              compute_dtype)
+
+
+def rglru_block_cache_init(batch: int, width: int, dtype=jnp.float32) -> Params:
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_K - 1, width), dtype)}
+
+
+def rglru_block_step(p: Params, x_t: jax.Array, cache: Params,
+                     compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+    """One decode step of the full block. x_t: (B, 1, d)."""
+    gate = jax.nn.gelu(common.dense_apply(p["w_gate_branch"], x_t, compute_dtype))
+    xin = common.dense_apply(p["w_in"], x_t, compute_dtype)
+    xc, conv_state = _causal_conv(p["conv_w"].astype(jnp.float32),
+                                  xin, cache["conv"].astype(jnp.float32))
+    y, h_new = rglru_step(p, xc[:, 0, :], cache["h"])
+    out = common.dense_apply(p["w_out"],
+                             (y[:, None, :] * gate).astype(compute_dtype),
+                             compute_dtype)
+    return out, {"h": h_new, "conv": conv_state.astype(cache["conv"].dtype)}

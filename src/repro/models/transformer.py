@@ -1,0 +1,707 @@
+"""Unified LM assembly: decoder-only / enc-dec / VLM / hybrid / ssm.
+
+A model is a sequence of *groups*; each group is (pattern, count) where the
+pattern is a tuple of block types. Params for a group are stacked over count
+and executed with ``lax.scan`` (compile time O(|pattern|), not O(layers) —
+essential for the 88-layer/61-layer dry-runs on this 1-core container).
+
+Block interface (see BLOCKS):
+    init(key, cfg)                       -> params
+    seq(p, cfg, x, ctx)                  -> (x, aux_loss)          # no cache
+    prefill(p, cfg, x, ctx)              -> (x, aux, cache)
+    cache_init(cfg, batch, max_len)      -> cache
+    step(p, cfg, x_t, cache, pos, ctx)   -> (x_t, new_cache)
+
+ctx carries positions and the cross-attention context (encoder output or
+image patch embeddings — both stubs feed precomputed embeddings by
+assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common, moe, rglru, xlstm
+from repro.train import sketched_dense as sd
+
+Params = Dict[str, Any]
+
+
+def _cdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def _pdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _sdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.attn_scores_dtype == "bfloat16" else jnp.float32
+
+
+def constrain_act(cfg: ArchConfig, x, spec):
+    """Optional activation sharding constraint (hillclimb lever: keeps the
+    batch axis sharded through recurrent scans where GSPMD otherwise
+    replicates; no-op unless cfg.constrain_activations and a mesh is
+    registered via repro.dist.meshctx)."""
+    if not cfg.constrain_activations:
+        return x
+    from repro.dist import meshctx
+    from jax.sharding import NamedSharding
+    mesh = meshctx.get_mesh()
+    if mesh is None:
+        return x
+    resolved = tuple(s if (s is None or s in mesh.axis_names) else None
+                     for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*resolved)))
+
+
+# ===========================================================================
+# Block implementations
+# ===========================================================================
+
+class _AttnBlock:
+    """Pre-norm self-attention + MLP. Variants: causal/bidirectional/windowed,
+    dense-MLP-size override (MoE stacks' first dense layer)."""
+
+    def __init__(self, causal=True, window_attr=None, d_ff_attr="d_ff"):
+        self.causal = causal
+        self.window_attr = window_attr
+        self.d_ff_attr = d_ff_attr
+
+    def _window(self, cfg):
+        return getattr(cfg, self.window_attr) if self.window_attr else None
+
+    def init(self, key, cfg: ArchConfig) -> Params:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        d_ff = getattr(cfg, self.d_ff_attr) or cfg.d_ff
+        mlp = common.mlp_init(k2, cfg.d_model, d_ff, gated=cfg.gated_mlp,
+                              dtype=_pdtype(cfg), bias=cfg.attn_bias)
+        if cfg.sketched_mlp:
+            # SMP-PCA gradient taps on the (flop-dominant) MLP matmuls: the
+            # backward pass emits one-pass (X, dY) sketches instead of dW
+            tk = sd.TapConfig().sketch_k
+            mlp["up"]["taps"] = sd.tap_init(cfg.d_model, d_ff, tk)
+            mlp["down"]["taps"] = sd.tap_init(d_ff, cfg.d_model, tk)
+        return {
+            "norm1": common.norm_init(cfg.norm, cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_, dtype=_pdtype(cfg),
+                                   bias=cfg.attn_bias),
+            "norm2": common.norm_init(cfg.norm, cfg.d_model),
+            "mlp": mlp,
+        }
+
+    def _attend(self, p, cfg, x, ctx, cache=None, pos=None, build_cache=False):
+        cd = _cdtype(cfg)
+        h = common.norm_apply(cfg.norm, p["norm1"], x)
+        q, k, v = attn.qkv_project(p["attn"], h.astype(cd), cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim_,
+                                   ctx["positions"], cfg.rope_theta, cd)
+        if cache is not None and not build_cache:        # decode
+            cache = attn.cache_update(cache, k, v, pos,
+                                      ring=self._window(cfg) is not None)
+            o = attn.decode_attention(q, cache, pos, window=self._window(cfg))
+        else:
+            o = attn.attention(q, k, v, causal=self.causal,
+                               window=self._window(cfg),
+                               scores_dtype=_sdtype(cfg))
+        B, S = x.shape[:2]
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_)
+        o = common.dense_apply(p["attn"]["wo"], o.astype(cd), cd)
+        new_cache = cache
+        if build_cache:
+            # write prompt KV into the preallocated cache at offset 0. For
+            # ring (window) caches we keep the last `window` tokens; ring
+            # slots align because the shape suites use S % window == 0 (or
+            # S < window, where the ring is simply partially filled).
+            w = self._window(cfg)
+            L = cache["k"].shape[1]
+            kk, vv = (k[:, -L:], v[:, -L:]) if (w and S > L) else (k, v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], kk.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], vv.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+        return o, new_cache
+
+    def seq(self, p, cfg, x, ctx):
+        o, _ = self._attend(p, cfg, x, ctx)
+        o = _checkpoint_name(o, "attn_out")
+        x = x + o
+        h = common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg))
+        if cfg.sketched_mlp and "taps" in p["mlp"]["up"]:
+            d_ff_mlp = _sketched_mlp_apply(p["mlp"], h, cfg, ctx)
+        else:
+            d_ff_mlp = common.mlp_apply(p["mlp"], h, cfg.act, _cdtype(cfg))
+        return x + d_ff_mlp, jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        o, cache = self._attend(p, cfg, x, ctx, cache=cache, build_cache=True)
+        x = x + o
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, jnp.float32(0.0), cache
+
+    def cache_init(self, cfg, batch, max_len):
+        L = min(self._window(cfg) or max_len, max_len)
+        return attn.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.head_dim_,
+                                  _cdtype(cfg))
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        o, cache = self._attend(p, cfg, x, ctx, cache=cache, pos=pos)
+        x = x + o
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, cache
+
+
+class _MoEBlock(_AttnBlock):
+    """Self-attention + MoE FFN (expert-parallel)."""
+
+    def init(self, key, cfg: ArchConfig) -> Params:
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": common.norm_init(cfg.norm, cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_, dtype=_pdtype(cfg),
+                                   bias=cfg.attn_bias),
+            "norm2": common.norm_init(cfg.norm, cfg.d_model),
+            "moe": moe.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                n_shared=cfg.n_shared_experts,
+                                gated=cfg.gated_mlp, dtype=_pdtype(cfg)),
+        }
+
+    def _ffn(self, p, cfg, x):
+        h = common.norm_apply(cfg.norm, p["norm2"], x)
+        out, aux = moe.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act, compute_dtype=_cdtype(cfg))
+        return x + out, aux
+
+    def seq(self, p, cfg, x, ctx):
+        o, _ = self._attend(p, cfg, x, ctx)
+        return self._ffn(p, cfg, x + o)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        o, cache = self._attend(p, cfg, x, ctx, cache=cache, build_cache=True)
+        x, aux = self._ffn(p, cfg, x + o)
+        return x, aux, cache
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        o, cache = self._attend(p, cfg, x, ctx, cache=cache, pos=pos)
+        x, _ = self._ffn(p, cfg, x + o)
+        return x, cache
+
+
+class _CrossBlock:
+    """Gated cross-attention + MLP (VLM interleaved layers). The KV side is a
+    static context (image patches); its projections are cached at prefill."""
+
+    def init(self, key, cfg: ArchConfig) -> Params:
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": common.norm_init(cfg.norm, cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_, dtype=_pdtype(cfg)),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "norm2": common.norm_init(cfg.norm, cfg.d_model),
+            "mlp": common.mlp_init(k2, cfg.d_model, cfg.d_ff,
+                                   gated=cfg.gated_mlp, dtype=_pdtype(cfg)),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+
+    def _cross_kv(self, p, cfg, ctx_seq):
+        cd = _cdtype(cfg)
+        B, L, _ = ctx_seq.shape
+        k = common.dense_apply(p["attn"]["wk"], ctx_seq.astype(cd), cd) \
+            .reshape(B, L, cfg.n_kv_heads, cfg.head_dim_)
+        v = common.dense_apply(p["attn"]["wv"], ctx_seq.astype(cd), cd) \
+            .reshape(B, L, cfg.n_kv_heads, cfg.head_dim_)
+        return k.astype(cd), v.astype(cd)
+
+    def _cross(self, p, cfg, x, k, v):
+        cd = _cdtype(cfg)
+        B, S, _ = x.shape
+        h = common.norm_apply(cfg.norm, p["norm1"], x)
+        q = common.dense_apply(p["attn"]["wq"], h.astype(cd), cd) \
+            .reshape(B, S, cfg.n_heads, cfg.head_dim_)
+        o = attn.dense_attention(q, k, v, causal=False)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_)
+        o = common.dense_apply(p["attn"]["wo"], o.astype(cd), cd)
+        return jnp.tanh(p["gate_attn"]) * o
+
+    def _mlp(self, p, cfg, x):
+        h = common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return jnp.tanh(p["gate_mlp"]) * h
+
+    def seq(self, p, cfg, x, ctx):
+        k, v = self._cross_kv(p, cfg, ctx["xattn_ctx"])
+        x = x + self._cross(p, cfg, x, k, v)
+        return x + self._mlp(p, cfg, x), jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        k, v = self._cross_kv(p, cfg, ctx["xattn_ctx"])
+        x = x + self._cross(p, cfg, x, k, v)
+        x = x + self._mlp(p, cfg, x)
+        return x, jnp.float32(0.0), {"k": k.astype(cache["k"].dtype),
+                                     "v": v.astype(cache["v"].dtype)}
+
+    def cache_init(self, cfg, batch, max_len):
+        L = cfg.n_img_tokens or cfg.enc_context
+        return attn.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.head_dim_,
+                                  _cdtype(cfg))
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        x = x + self._cross(p, cfg, x, cache["k"], cache["v"])
+        return x + self._mlp(p, cfg, x), cache
+
+
+class _DecXAttnBlock(_AttnBlock):
+    """Whisper decoder layer: causal self-attn + cross-attn(enc) + MLP."""
+
+    def init(self, key, cfg: ArchConfig) -> Params:
+        p = super().init(key, cfg)
+        k = jax.random.fold_in(key, 99)
+        p["normx"] = common.norm_init(cfg.norm, cfg.d_model)
+        p["xattn"] = attn.attn_init(k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim_, dtype=_pdtype(cfg),
+                                    bias=cfg.attn_bias)
+        return p
+
+    def _enc_kv(self, p, cfg, enc):
+        cd = _cdtype(cfg)
+        B, L, _ = enc.shape
+        k = common.dense_apply(p["xattn"]["wk"], enc.astype(cd), cd) \
+            .reshape(B, L, cfg.n_kv_heads, cfg.head_dim_)
+        v = common.dense_apply(p["xattn"]["wv"], enc.astype(cd), cd) \
+            .reshape(B, L, cfg.n_kv_heads, cfg.head_dim_)
+        return k, v
+
+    def _xattend(self, p, cfg, x, k, v):
+        cd = _cdtype(cfg)
+        B, S, _ = x.shape
+        h = common.norm_apply(cfg.norm, p["normx"], x)
+        q = common.dense_apply(p["xattn"]["wq"], h.astype(cd), cd) \
+            .reshape(B, S, cfg.n_heads, cfg.head_dim_)
+        o = attn.dense_attention(q, k, v, causal=False)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim_)
+        return common.dense_apply(p["xattn"]["wo"], o.astype(cd), cd)
+
+    def seq(self, p, cfg, x, ctx):
+        o, _ = self._attend(p, cfg, x, ctx)
+        x = x + o
+        k, v = self._enc_kv(p, cfg, ctx["xattn_ctx"])
+        x = x + self._xattend(p, cfg, x, k, v)
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        o, self_cache = self._attend(p, cfg, x, ctx, cache=cache["self"],
+                                     build_cache=True)
+        x = x + o
+        k, v = self._enc_kv(p, cfg, ctx["xattn_ctx"])
+        x = x + self._xattend(p, cfg, x, k, v)
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        cross = {"k": k.astype(cache["cross"]["k"].dtype),
+                 "v": v.astype(cache["cross"]["v"].dtype)}
+        return x, jnp.float32(0.0), {"self": self_cache, "cross": cross}
+
+    def cache_init(self, cfg, batch, max_len):
+        return {"self": attn.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                           cfg.head_dim_, _cdtype(cfg)),
+                "cross": attn.init_kv_cache(batch, cfg.enc_context,
+                                            cfg.n_kv_heads, cfg.head_dim_,
+                                            _cdtype(cfg))}
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        o, self_cache = self._attend(p, cfg, x, ctx, cache=cache["self"], pos=pos)
+        x = x + o
+        x = x + self._xattend(p, cfg, x, cache["cross"]["k"], cache["cross"]["v"])
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, {"self": self_cache, "cross": cache["cross"]}
+
+
+class _RGLRUBlock:
+    """RecurrentGemma block: RG-LRU mixer + MLP, both pre-norm residual."""
+
+    def init(self, key, cfg: ArchConfig) -> Params:
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": common.norm_init(cfg.norm, cfg.d_model),
+            "lru": rglru.rglru_init(k1, cfg.d_model, cfg.lru_width or cfg.d_model,
+                                    dtype=_pdtype(cfg)),
+            "norm2": common.norm_init(cfg.norm, cfg.d_model),
+            "mlp": common.mlp_init(k2, cfg.d_model, cfg.d_ff,
+                                   gated=cfg.gated_mlp, dtype=_pdtype(cfg)),
+        }
+
+    def seq(self, p, cfg, x, ctx):
+        h = common.norm_apply(cfg.norm, p["norm1"], x)
+        x = x + rglru.rglru_block_seq(p["lru"], h, _cdtype(cfg))
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        # run the sequence in parallel form, hand the final state to decode
+        h = common.norm_apply(cfg.norm, p["norm1"], x)
+        cd = _cdtype(cfg)
+        gate = jax.nn.gelu(common.dense_apply(p["lru"]["w_gate_branch"], h, cd))
+        xin = common.dense_apply(p["lru"]["w_in"], h, cd)
+        xc, conv_state = rglru._causal_conv(
+            p["lru"]["conv_w"].astype(jnp.float32), xin)
+        y, h_final = rglru.rglru_seq(p["lru"], xc, compute_dtype=cd)
+        o = common.dense_apply(p["lru"]["w_out"], (y * gate).astype(cd), cd)
+        x = x + o
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(cd),
+            cfg.act, cd)
+        new_cache = {"h": h_final, "conv": conv_state.astype(cache["conv"].dtype)}
+        return x, jnp.float32(0.0), new_cache
+
+    def cache_init(self, cfg, batch, max_len):
+        return rglru.rglru_block_cache_init(batch, cfg.lru_width or cfg.d_model,
+                                            _cdtype(cfg))
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        h = common.norm_apply(cfg.norm, p["norm1"], x)
+        o, cache = rglru.rglru_block_step(p["lru"], h, cache, _cdtype(cfg))
+        x = x + o
+        x = x + common.mlp_apply(
+            p["mlp"], common.norm_apply(cfg.norm, p["norm2"], x).astype(_cdtype(cfg)),
+            cfg.act, _cdtype(cfg))
+        return x, cache
+
+
+class _MLSTMBlock:
+    def init(self, key, cfg: ArchConfig) -> Params:
+        return {"norm": common.norm_init(cfg.norm, cfg.d_model),
+                "core": xlstm.mlstm_init(key, cfg.d_model, cfg.n_heads,
+                                         proj_factor=cfg.proj_factor,
+                                         dtype=_pdtype(cfg))}
+
+    def seq(self, p, cfg, x, ctx):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        return x + xlstm.mlstm_block_seq(p["core"], h, cfg.n_heads,
+                                         _cdtype(cfg)), jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        o, state = xlstm.mlstm_block_seq(p["core"], h, cfg.n_heads,
+                                         _cdtype(cfg), return_state=True)
+        return x + o, jnp.float32(0.0), state
+
+    def cache_init(self, cfg, batch, max_len):
+        di = int(cfg.d_model * cfg.proj_factor)
+        return xlstm.mlstm_cache_init(batch, cfg.n_heads, di // cfg.n_heads, di)
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        o, cache = xlstm.mlstm_block_step(p["core"], h, cache, cfg.n_heads,
+                                          _cdtype(cfg))
+        return x + o, cache
+
+
+class _SLSTMBlock:
+    def init(self, key, cfg: ArchConfig) -> Params:
+        return {"norm": common.norm_init(cfg.norm, cfg.d_model),
+                "core": xlstm.slstm_init(key, cfg.d_model, cfg.n_heads,
+                                         dtype=_pdtype(cfg))}
+
+    def seq(self, p, cfg, x, ctx):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        cons = (lambda t, spec: constrain_act(cfg, t, spec)) \
+            if cfg.constrain_activations else None
+        return x + xlstm.slstm_block_seq(p["core"], h, _cdtype(cfg),
+                                         constrain=cons), jnp.float32(0.0)
+
+    def prefill(self, p, cfg, x, ctx, cache):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        o, state = xlstm.slstm_block_seq(p["core"], h, _cdtype(cfg),
+                                         return_state=True)
+        return x + o, jnp.float32(0.0), state
+
+    def cache_init(self, cfg, batch, max_len):
+        return xlstm.slstm_cache_init(batch, cfg.d_model)
+
+    def step(self, p, cfg, x, cache, pos, ctx):
+        h = common.norm_apply(cfg.norm, p["norm"], x)
+        o, cache = xlstm.slstm_block_step(p["core"], h, cache, _cdtype(cfg))
+        return x + o, cache
+
+
+BLOCKS = {
+    "attn": _AttnBlock(causal=True),
+    "attn_dense_first": _AttnBlock(causal=True, d_ff_attr="dense_d_ff"),
+    "enc": _AttnBlock(causal=False),
+    "local_attn": _AttnBlock(causal=True, window_attr="window"),
+    "attn_moe": _MoEBlock(causal=True),
+    "xattn": _CrossBlock(),
+    "dec_xattn": _DecXAttnBlock(causal=True),
+    "rglru": _RGLRUBlock(),
+    "mlstm": _MLSTMBlock(),
+    "slstm": _SLSTMBlock(),
+}
+
+
+def _sketched_mlp_apply(p, h, cfg, ctx):
+    """MLP with gradient-tap dense layers on up/down (gate stays plain —
+    its grad shares X with up and adds little information)."""
+    cd = _cdtype(cfg)
+    key = ctx.get("sketch_key")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    tk = sd.TapConfig().sketch_k
+    up = sd.sketched_dense(p["up"]["w"], p["up"]["taps"], h.astype(cd),
+                           key, tk, 2048)
+    if "gate" in p:
+        g = common.dense_apply(p["gate"], h, cd)
+        hidden = common.ACTIVATIONS[cfg.act](g) * up
+    else:
+        hidden = common.ACTIVATIONS[cfg.act](up)
+    return sd.sketched_dense(p["down"]["w"], p["down"]["taps"],
+                             hidden.astype(cd), jax.random.fold_in(key, 1),
+                             tk, 2048)
+
+
+# ===========================================================================
+# Groups: init / seq / prefill / decode over stacked params
+# ===========================================================================
+
+def _group_init(key, pattern, count, cfg):
+    def slot(k):
+        ks = jax.random.split(k, len(pattern))
+        return tuple(BLOCKS[b].init(kk, cfg) for b, kk in zip(pattern, ks))
+    return jax.vmap(slot)(jax.random.split(key, count))
+
+
+def _group_seq(gp, pattern, cfg, x, ctx):
+    def body(carry, slot_params):
+        x, aux = carry
+        for b, p in zip(pattern, slot_params):
+            x, a = BLOCKS[b].seq(p, cfg, x, ctx)
+            aux = aux + a
+        return (x, aux), None
+    if cfg.remat:
+        if cfg.remat_policy == "save_attn_out":
+            # keep each layer's attention output: the backward pass never
+            # recomputes the S^2 score work (memory-term hillclimb lever)
+            policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), gp)
+    return x, aux
+
+
+def _group_prefill(gp, caches_in, pattern, cfg, x, ctx):
+    def body(x, inputs):
+        slot_params, slot_caches = inputs
+        caches = []
+        for b, p, c in zip(pattern, slot_params, slot_caches):
+            x, _, cn = BLOCKS[b].prefill(p, cfg, x, ctx, c)
+            caches.append(cn)
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(body, x, (gp, caches_in))
+    return x, caches
+
+
+def _group_cache_init(pattern, count, cfg, batch, max_len):
+    def one(_):
+        return tuple(BLOCKS[b].cache_init(cfg, batch, max_len) for b in pattern)
+    return jax.vmap(one)(jnp.arange(count))
+
+
+def _group_step(gp, caches, pattern, cfg, x, pos, ctx):
+    def body(x, inputs):
+        slot_params, slot_caches = inputs
+        new = []
+        for b, p, c in zip(pattern, slot_params, slot_caches):
+            x, cn = BLOCKS[b].step(p, cfg, x, c, pos, ctx)
+            new.append(cn)
+        return x, tuple(new)
+    x, new_caches = jax.lax.scan(body, x, (gp, caches))
+    return x, new_caches
+
+
+# ===========================================================================
+# Whole-model init / forward / loss / prefill / decode
+# ===========================================================================
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    pd = _pdtype(cfg)
+    params: Params = {
+        "embed": common.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, pd),
+        "final_norm": common.norm_init(cfg.norm, cfg.d_model),
+        "groups": [
+            _group_init(jax.random.fold_in(ks[1], gi), pattern, count, cfg)
+            for gi, (pattern, count) in enumerate(cfg.groups)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = common.dense_init(ks[2], cfg.d_model,
+                                           cfg.vocab_padded, dtype=pd)
+    if cfg.is_encdec:
+        params["enc"] = {
+            "groups": [_group_init(ks[3], ("enc",), cfg.n_enc_layers, cfg)],
+            "final_norm": common.norm_init(cfg.norm, cfg.d_model),
+        }
+    if cfg.n_img_tokens:
+        params["img_proj"] = common.dense_init(ks[4], cfg.d_model, cfg.d_model,
+                                               dtype=pd)
+    return params
+
+
+def _encode(params, cfg, enc_input):
+    """Whisper encoder over stubbed frame embeddings (B, enc_context, d)."""
+    S = enc_input.shape[1]
+    x = enc_input.astype(jnp.float32) + common.sinusoidal_positions(S, cfg.d_model)
+    ctx = {"positions": jnp.arange(S), "xattn_ctx": None}
+    x, _ = _group_seq(params["enc"]["groups"][0], ("enc",), cfg, x, ctx)
+    return common.norm_apply(cfg.norm, params["enc"]["final_norm"], x)
+
+
+def _xattn_context(params, cfg, aux_inputs):
+    if cfg.is_encdec:
+        return _encode(params, cfg, aux_inputs["enc_frames"])
+    if cfg.n_img_tokens:
+        img = aux_inputs["img_embeds"]
+        return common.dense_apply(params["img_proj"], img, _cdtype(cfg))
+    return None
+
+
+def _backbone(params, cfg, x, ctx, mode="seq", caches=None, pos=None):
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for gi, (pattern, count) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        if mode == "seq":
+            x, aux = _group_seq(gp, pattern, cfg, x, ctx)
+            aux_total = aux_total + aux
+        elif mode == "prefill":
+            x, cache = _group_prefill(gp, caches[gi], pattern, cfg, x, ctx)
+            new_caches.append(cache)
+        elif mode == "step":
+            x, cache = _group_step(gp, caches[gi], pattern, cfg, x, pos, ctx)
+            new_caches.append(cache)
+    x = common.norm_apply(cfg.norm, params["final_norm"], x)
+    return x, aux_total, new_caches
+
+
+def _embed_tokens(params, cfg, tokens, positions=None):
+    x = common.embed_apply(params["embed"], tokens).astype(jnp.float32)
+    if cfg.rope_theta is None:   # absolute sinusoidal positions
+        S = tokens.shape[1]
+        if positions is None:
+            x = x + common.sinusoidal_positions(S, cfg.d_model)
+        else:
+            # decode: single position embedding computed directly
+            pos = positions.reshape(-1)[0]
+            dimh = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+            ang = pos.astype(jnp.float32) / (10000.0 ** (dimh / cfg.d_model))
+            pe = jnp.zeros((cfg.d_model,), jnp.float32)
+            pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+            x = x + pe
+    return x
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = common.unembed_apply(params["embed"], x, _cdtype(cfg))
+    else:
+        logits = common.dense_apply(params["head"], x, _cdtype(cfg))
+    # mask vocab padding
+    if cfg.vocab_padded != cfg.vocab_size:
+        neg = jnp.full((cfg.vocab_padded - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> jax.Array:
+    """Mean next-token cross entropy, sequence-chunked over the (huge) vocab
+    projection so peak memory is O(B * loss_chunk * vocab)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    ctx = {"positions": jnp.arange(S),
+           "xattn_ctx": _xattn_context(params, cfg, batch),
+           "sketch_key": jax.random.PRNGKey(17)}
+    x = _embed_tokens(params, cfg, tokens)
+    x, aux, _ = _backbone(params, cfg, x, ctx, mode="seq")
+
+    ck = min(cfg.loss_chunk, S)
+    assert S % ck == 0, (S, ck)
+    xc = x.reshape(B, S // ck, ck, cfg.d_model).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, S // ck, ck).transpose(1, 0, 2)
+
+    def chunk(carry, inp):
+        xb, lb = inp
+        logits = _logits(params, cfg, xb)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(chunk, jnp.float32(0.0), (xc, lc))
+    loss = total / (B * S)
+    if cfg.n_experts:
+        loss = loss + cfg.aux_loss_weight * aux
+    return loss
+
+
+def lm_prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+               caches):
+    """Forward over the prompt, writing KV/state into the *preallocated*
+    caches (serving engines allocate max_len up front and prefill fills the
+    prefix). Returns (last-token logits, filled caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    ctx = {"positions": jnp.arange(S),
+           "xattn_ctx": _xattn_context(params, cfg, batch)}
+    x = _embed_tokens(params, cfg, tokens)
+    x, _, caches = _backbone(params, cfg, x, ctx, mode="prefill",
+                             caches=caches)
+    return _logits(params, cfg, x[:, -1:, :]), caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return [
+        _group_cache_init(pattern, count, cfg, batch, max_len)
+        for pattern, count in cfg.groups
+    ]
+
+
+def lm_decode_step(params: Params, cfg: ArchConfig, caches,
+                   token: jax.Array, pos: jax.Array,
+                   aux_inputs: Optional[Dict[str, jax.Array]] = None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current
+    position). Returns (logits (B, 1, vocab), new caches)."""
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    ctx = {"positions": positions, "xattn_ctx": None}
+    x = _embed_tokens(params, cfg, token, positions=positions)
+    x, _, new_caches = _backbone(params, cfg, x, ctx, mode="step",
+                                 caches=caches, pos=pos)
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,309 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, fully
+parallelizable) and sLSTM (scalar memory with exponential gating).
+
+mLSTM recurrence per head (state C: Dh x Dh, normalizer n: Dh, stabilizer m):
+    f_t = exp gate (forget, log-space), i_t = exp gate (input)
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = exp(log f_t + m_{t-1} - m_t) C_{t-1} + exp(log i_t - m_t) v_t k_t^T
+    n_t = exp(log f_t + m_{t-1} - m_t) n_{t-1} + exp(log i_t - m_t) k_t
+    h_t = C_t q_t / max(|n_t^T q_t|, 1)
+
+Training/prefill uses the chunkwise-parallel form: within a chunk the decays
+are cumulative products applied as a (chunk x chunk) masked attention-like
+matmul; across chunks a scan carries (C, n, m). This is the TPU adaptation:
+MXU-friendly chunk matmuls instead of the paper's fused CUDA scan.
+
+sLSTM keeps per-head scalar state (c, n, m) and is inherently sequential; we
+scan over time (cheap: state is (B, H) scalars; the block's cost is in its
+projections, which batch over S).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = Dict[str, Any]
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, d: int, n_heads: int, *, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> Params:
+    di = int(d * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": common.dense_init(ks[0], d, 2 * di, dtype=dtype),   # x and gate
+        "wq": common.dense_init(ks[1], di, di, dtype=dtype),
+        "wk": common.dense_init(ks[2], di, di, dtype=dtype),
+        "wv": common.dense_init(ks[3], di, di, dtype=dtype),
+        "w_if": common.dense_init(ks[4], di, 2 * n_heads, dtype=jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (4, di), jnp.float32) * 0.5).astype(dtype),
+        "norm": common.rmsnorm_init(di),
+        "w_down": common.dense_init(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunk_parallel(q, k, v, log_f, log_i):
+    """Chunkwise-parallel mLSTM. q,k,v: (B, H, S, Dh); gates: (B, H, S).
+    Returns h: (B, H, S, Dh)."""
+    B, H, S, Dh = q.shape
+    nc = S // MLSTM_CHUNK
+    L = MLSTM_CHUNK
+    qc = q.reshape(B, H, nc, L, Dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, L, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, L, Dh).transpose(2, 0, 1, 3, 4)
+    fc = log_f.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+    ic = log_i.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                      # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qb, kb, vb, fb, ib = inp
+        csum_f = jnp.cumsum(fb, axis=-1)     # (B,H,L) inclusive
+        # decay from chunk start to t (exclusive of t's own f? include):
+        # state contribution: C_{t} includes prod_{s<=t} f_s from chunk start
+        b = csum_f                            # log prod f_1..t
+        # intra-chunk weights: for s <= t: prod_{u=s+1..t} f_u * i_s
+        #   = exp(b_t - b_s + i_s)
+        log_w = b[..., :, None] - b[..., None, :] + ib[..., None, :]  # (B,H,L,L)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        log_w = jnp.where(mask, log_w, -jnp.inf)
+        # inter-chunk: exp(b_t + m_prev) applied to carried state
+        m_intra = jnp.max(log_w, axis=-1)                  # (B,H,L)
+        m_inter = b + m[..., None]                          # (B,H,L)
+        m_t = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(log_w - m_t[..., None])                 # (B,H,L,L)
+        scale_inter = jnp.exp(m_inter - m_t)                # (B,H,L)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) / math.sqrt(Dh)
+        h_intra = jnp.einsum("bhts,bhsd->bhtd", w * scores, vb.astype(jnp.float32))
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qb.astype(jnp.float32), C) \
+            * scale_inter[..., None] / math.sqrt(Dh)
+        num = h_intra + h_inter
+        # denominator: n_t^T q_t with the same weighting
+        den_intra = jnp.einsum("bhts,bhsd,bhtd->bht", w, kb.astype(jnp.float32),
+                               qb.astype(jnp.float32)) / math.sqrt(Dh)
+        den_inter = jnp.einsum("bhd,bhtd->bht", n, qb.astype(jnp.float32)) \
+            * scale_inter / math.sqrt(Dh)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # ---- carry update to end of chunk ----
+        tot_f = b[..., -1]                                  # (B,H)
+        m_end = jnp.maximum(tot_f + m, jnp.max(ib + (tot_f[..., None] - b),
+                                               axis=-1))
+        decay_old = jnp.exp(tot_f + m - m_end)
+        wk_end = jnp.exp(ib + (tot_f[..., None] - b) - m_end[..., None])
+        C_new = decay_old[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", wk_end, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n_new = decay_old[..., None] * n + jnp.einsum(
+            "bhs,bhsd->bhd", wk_end, kb.astype(jnp.float32))
+        return (C_new, n_new, m_end), h
+
+    init = (jnp.zeros((B, H, Dh, Dh), jnp.float32),
+            jnp.zeros((B, H, Dh), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(chunk_step, init, (qc, kc, vc, fc, ic))
+    return hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh), final
+
+
+def mlstm_block_seq(p: Params, x: jax.Array, n_heads: int,
+                    compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full mLSTM block over a sequence. x: (B, S, d).
+
+    return_state=True additionally returns the decode cache holding the
+    end-of-sequence (C, n, m) carry and conv state (exact prefill handoff)."""
+    B, S, d = x.shape
+    up = common.dense_apply(p["w_up"], x, compute_dtype)
+    xi, gate = jnp.split(up, 2, axis=-1)                    # (B, S, di)
+    di = xi.shape[-1]
+    dh = di // n_heads
+    # causal conv front (as in the paper's block)
+    state = jnp.zeros((B, 3, di), xi.dtype)
+    xp = jnp.concatenate([state, xi.astype(jnp.float32)], axis=1)
+    xc = sum(xp[:, i:i + S, :] * p["conv_w"][i][None, None, :].astype(jnp.float32)
+             for i in range(4))
+    xc = jax.nn.silu(xc)
+    q = common.dense_apply(p["wq"], xc, compute_dtype).reshape(B, S, n_heads, dh)
+    k = common.dense_apply(p["wk"], xc, compute_dtype).reshape(B, S, n_heads, dh)
+    v = common.dense_apply(p["wv"], xi, compute_dtype).reshape(B, S, n_heads, dh)
+    if_gates = common.dense_apply(p["w_if"], xc)            # (B, S, 2H) f32
+    log_i, log_f = jnp.split(if_gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(log_f)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    log_f = log_f.transpose(0, 2, 1)
+    log_i = log_i.transpose(0, 2, 1)
+    if S % MLSTM_CHUNK == 0 and S > MLSTM_CHUNK:
+        h, state = _mlstm_chunk_parallel(q, k, v, log_f, log_i)
+    else:
+        h, state = _mlstm_chunk_parallel_single(q, k, v, log_f, log_i)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    h = common.rmsnorm_apply(p["norm"], h)
+    out = h * jax.nn.silu(gate.astype(jnp.float32))
+    out = common.dense_apply(p["w_down"], out.astype(compute_dtype),
+                             compute_dtype)
+    if return_state:
+        C, n, m = state
+        return out, {"C": C, "n": n, "m": m, "conv": xp[:, -3:, :]}
+    return out
+
+
+def _mlstm_chunk_parallel_single(q, k, v, log_f, log_i):
+    """Single-chunk (full-sequence) stabilized parallel form."""
+    B, H, S, Dh = q.shape
+    b = jnp.cumsum(log_f, axis=-1)
+    log_w = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    log_w = jnp.where(mask, log_w, -jnp.inf)
+    m_t = jnp.max(log_w, axis=-1)
+    w = jnp.exp(log_w - m_t[..., None])
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(Dh)
+    num = jnp.einsum("bhts,bhsd->bhtd", w * scores, v.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhts,bhsd,bhtd->bht", w,
+                                         k.astype(jnp.float32),
+                                         q.astype(jnp.float32))
+                              / math.sqrt(Dh)), jnp.exp(-m_t))
+    # end-of-sequence carry (same algebra as chunk_step with m_prev = -inf)
+    tot_f = b[..., -1]
+    m_end = jnp.max(log_i + (tot_f[..., None] - b), axis=-1)
+    wk_end = jnp.exp(log_i + (tot_f[..., None] - b) - m_end[..., None])
+    C = jnp.einsum("bhs,bhsd,bhse->bhde", wk_end, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bhs,bhsd->bhd", wk_end, k.astype(jnp.float32))
+    return num / den[..., None], (C, n, m_end)
+
+
+def mlstm_cache_init(batch: int, n_heads: int, head_dim: int, di: int) -> Params:
+    return {"C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), jnp.float32)}
+
+
+def mlstm_block_step(p: Params, x_t: jax.Array, cache: Params, n_heads: int,
+                     compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+    """One decode step. x_t: (B, 1, d)."""
+    B = x_t.shape[0]
+    up = common.dense_apply(p["w_up"], x_t, compute_dtype)
+    xi, gate = jnp.split(up, 2, axis=-1)
+    di = xi.shape[-1]
+    dh = di // n_heads
+    xp = jnp.concatenate([cache["conv"], xi.astype(jnp.float32)], axis=1)
+    xc = sum(xp[:, i:i + 1, :] * p["conv_w"][i][None, None, :].astype(jnp.float32)
+             for i in range(4))
+    xc = jax.nn.silu(xc)
+    q = common.dense_apply(p["wq"], xc, compute_dtype).reshape(B, n_heads, dh)
+    k = common.dense_apply(p["wk"], xc, compute_dtype).reshape(B, n_heads, dh)
+    v = common.dense_apply(p["wv"], xi, compute_dtype).reshape(B, n_heads, dh)
+    if_g = common.dense_apply(p["w_if"], xc)[:, 0]           # (B, 2H)
+    log_i, log_f = jnp.split(if_g, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(log_f)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    df = jnp.exp(log_f + m - m_new)
+    di_ = jnp.exp(log_i - m_new)
+    C_new = df[..., None, None] * C + di_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = df[..., None] * n + di_[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C_new) / math.sqrt(dh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new,
+                                         q.astype(jnp.float32)) / math.sqrt(dh)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, di)
+    h = common.rmsnorm_apply(p["norm"], h)
+    out = h * jax.nn.silu(gate.astype(jnp.float32))
+    out = common.dense_apply(p["w_down"], out.astype(compute_dtype), compute_dtype)
+    return out, {"C": C_new, "n": n_new, "m": m_new,
+                 "conv": xp[:, -3:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, d: int, n_heads: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": common.dense_init(ks[0], d, 4 * d, dtype=dtype),   # z i f o
+        "r_gates": common.dense_init(ks[1], d, 4 * d, dtype=dtype),   # recurrent
+        "norm": common.rmsnorm_init(d),
+        "w_ff": common.mlp_init(ks[2], d, int(d * 4 / 3), gated=True, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, x_gates, h_prev, state):
+    """x_gates: (B, 4d) precomputed input projections; state: (c, n, m)."""
+    c, n, m = state
+    r = common.dense_apply(p["r_gates"], h_prev)             # (B, 4d)
+    z, i, f, o = jnp.split(x_gates + r, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i)
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(log_f + m - m_new)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return h, (c_new, n_new, m_new)
+
+
+def slstm_block_seq(p: Params, x: jax.Array, compute_dtype=jnp.bfloat16,
+                    return_state: bool = False, constrain=None):
+    """sLSTM block over a sequence (scan over time). x: (B, S, d).
+
+    ``constrain(t, spec)``: optional activation-sharding hook — without it
+    GSPMD replicates the (S, B, 4d) gate buffer across the data axis inside
+    the time scan (the collective-term pathology found in the xlstm-350m
+    baseline dry-run; see EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    gates = common.dense_apply(p["w_gates"], x, compute_dtype)  # (B, S, 4d)
+    if constrain is not None:
+        gates = constrain(gates, ("data", None, None))
+
+    def step(carry, g_t):
+        h_prev, state = carry
+        h, state = _slstm_cell(p, g_t, h_prev, state)
+        return (h, state), h
+
+    init = (jnp.zeros((B, d), jnp.float32),
+            (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+             jnp.full((B, d), -1e30, jnp.float32)))
+    gates_t = gates.transpose(1, 0, 2)
+    if constrain is not None:
+        gates_t = constrain(gates_t, (None, "data", None))
+    (h_last, (c, n, m)), hs = jax.lax.scan(step, init, gates_t)
+    h = hs.transpose(1, 0, 2)                                # (B, S, d)
+    h = common.rmsnorm_apply(p["norm"], h)
+    out = common.mlp_apply(p["w_ff"], h.astype(compute_dtype), "silu",
+                           compute_dtype)
+    if return_state:
+        return out, {"h": h_last, "c": c, "n": n, "m": m}
+    return out
+
+
+def slstm_cache_init(batch: int, d: int) -> Params:
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_block_step(p: Params, x_t: jax.Array, cache: Params,
+                     compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+    g = common.dense_apply(p["w_gates"], x_t, compute_dtype)[:, 0]  # (B, 4d)
+    h, (c, n, m) = _slstm_cell(p, g, cache["h"],
+                               (cache["c"], cache["n"], cache["m"]))
+    hn = common.rmsnorm_apply(p["norm"], h)[:, None, :]
+    out = common.mlp_apply(p["w_ff"], hn.astype(compute_dtype), "silu",
+                           compute_dtype)
+    return out, {"h": h, "c": c, "n": n, "m": m}

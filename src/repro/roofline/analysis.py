@@ -1,0 +1,158 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips * 197e12)        [bf16 MXU peak]
+    memory     = HLO_bytes / (chips * 819e9)         [HBM bandwidth]
+    collective = coll_bytes / (chips * 50e9)         [per-link ICI]
+
+``cost_analysis`` on the SPMD-partitioned module reports per-device flops /
+bytes, so terms divide by ONE chip's peak; we cross-check against analytic
+6*N*D (the MODEL_FLOPS utility column catches remat recompute and padding
+waste). Collective bytes are not in cost_analysis: we parse the partitioned
+HLO text and sum operand bytes over all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_op: Dict[str, int]
+    count: int
+
+    def as_dict(self):
+        return {"total_bytes": self.total_bytes, "by_op": self.by_op,
+                "count": self.count}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in partitioned HLO.
+
+    HLO line form:  %name = <shape> <op>(<operands>), ...
+    The output shape of an all-gather/all-reduce equals (or bounds) the
+    moved payload per device; start-ops (async) are counted, done-ops
+    skipped (same buffer, avoids double counting).
+    """
+    by_op: Dict[str, int] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-start":
+                base = c
+                break
+            if op.startswith(c) and "done" in op:
+                base = None
+                break
+        if base is None:
+            continue
+        b = _shape_bytes(shape_str)
+        by_op[base] = by_op.get(base, 0) + b
+        count += 1
+    return CollectiveStats(sum(by_op.values()), by_op, count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device
+    bytes_accessed: float        # per-device
+    coll_bytes: float            # per-device
+    model_flops_per_device: float
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time assuming perfect overlap: max of terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat & padding waste show up here)."""
+        return self.model_flops_per_device / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful compute time / step time."""
+        t_useful = self.model_flops_per_device / PEAK_FLOPS
+        return t_useful / max(self.step_time, 1e-30)
+
+    def as_dict(self):
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "coll_bytes_per_device": self.coll_bytes,
+            "model_flops_per_device": self.model_flops_per_device,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb_s": self.step_time,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(kind: str, n_active_params: int, tokens: int,
+                enc_extra: int = 0) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (per step)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens + enc_extra

@@ -1,0 +1,427 @@
+"""Trip-count-aware static cost analysis of optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+with scan-over-layers (and chunked attention / loss chunking / microbatch
+scans) that undercounts flops, bytes, and collective payloads by the trip
+counts. This analyzer walks the HLO text, recovers static trip counts from
+each loop's condition (induction variable compared against a constant), and
+accumulates per-op costs with the correct multipliers:
+
+  flops:  dot = 2 * prod(out) * prod(contracting dims of lhs);
+          elementwise/reduce = output (resp. input) element count
+          (counted inside fusion computations too);
+  bytes:  operands + outputs of *top-level* ops (fusion internals excluded —
+          they live in registers/VMEM), with dynamic-update-slice, gather and
+          scatter special-cased to the slice/update size (XLA in-places them);
+  collectives: payload bytes per op kind, x trip counts of enclosing loops.
+
+Validated against XLA's own cost analysis on loop-free programs and against
+hand-counted scanned matmuls (tests/launch/test_hlo_analyzer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "and", "or", "xor", "not", "select",
+    "compare", "convert", "floor", "ceil", "round-nearest-afz", "sign",
+    "cosine", "sine", "clamp", "remainder", "atan2", "erf", "logistic",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "cbrt", "is-finite", "expm1", "log1p",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-_]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*((?:\([^=]*?\)|[^\s]+))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str       # operand list + attributes (raw tail of the line)
+
+    @property
+    def out_elems(self) -> int:
+        return _shape_elems_bytes(self.shape_str)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.shape_str)[1]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fusion_body: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.coll_bytes * f,
+                    {k: v * f for k, v in self.coll_by_op.items()})
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            s = line.rstrip()
+            # computation headers start at column 0 and end with '{'
+            if s.endswith("{") and "->" in s and not line.startswith(" "):
+                m = _COMP_HDR.match(s)
+                if m:
+                    name = m.group(2)
+                    cur = Computation(name, [],
+                                      is_fusion_body="fused" in name)
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        # tuple shapes embed /*index=N*/ comments whose '=' breaks parsing
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _called_comp(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-_]+)", rest)
+    return m.group(1) if m else None
+
+
+def _operand_section(rest: str) -> str:
+    """The operand list: everything before the closing paren of the op."""
+    depth = 0
+    end = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    return rest[:end]
+
+
+def _operand_shapes(rest: str, symtab: Optional[Dict[str, str]] = None
+                    ) -> List[str]:
+    """Shape strings of the operands. The optimized-HLO printer usually
+    omits inline operand shapes, so fall back to the computation's symbol
+    table (op name -> result shape)."""
+    args = _operand_section(rest)
+    inline = [m.group(0) for m in _SHAPE_RE.finditer(args)]
+    if inline:
+        return inline
+    if symtab is None:
+        return []
+    names = re.findall(r"%([\w.\-_]+)", args)
+    return [symtab[n] for n in names if n in symtab]
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    shapes = _operand_shapes(op.rest, symtab)
+    lhs = shapes[0] if shapes else ""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = 1
+    if m and lhs:
+        dims_m = _SHAPE_RE.search(lhs)
+        if dims_m and dims_m.group(2):
+            lhs_dims = [int(x) for x in dims_m.group(2).split(",")]
+            for ci in m.group(1).split(","):
+                if ci:
+                    contract *= lhs_dims[int(ci)]
+    return 2.0 * op.out_elems * contract
+
+
+def _trip_count(while_op: Op, comps: Dict[str, Computation]) -> int:
+    """Trip count: prefer the backend_config known_trip_count annotation,
+    else the largest positive constant in the condition computation (jax
+    scans compare the 0-based induction variable against the length)."""
+    m = re.search(r'known_trip_count[^0-9]*(\d+)', while_op.rest)
+    if m:
+        return int(m.group(1))
+    cond_name = _called_comp(while_op.rest, "condition")
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            mm = re.match(r"\(?\s*(-?\d+)", op.rest)
+            if mm and int(mm.group(1)) > best:
+                best = int(mm.group(1))
+    return best
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        self.entry = next((c for c in self.comps.values()
+                           if re.match(r"main", c.name)), None)
+        if self.entry is None:  # fall back: the last computation
+            names = list(self.comps)
+            self.entry = self.comps[names[-1]] if names else Computation("", [])
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self._fusion_reads: Dict[str, Dict[int, float]] = {}
+
+    # ------------------------------------------------------------------
+    def _param_reads(self, comp_name: str) -> Dict[int, float]:
+        """Per-parameter read-byte estimate for a fused computation.
+
+        XLA fuses dynamic-slice/gather into consumers: the fusion's parameter
+        is the WHOLE buffer but only a slice is read per execution. If every
+        use of a parameter inside the fusion is a slicing op, charge the
+        slice bytes; otherwise the full parameter. A parameter that is the
+        in-place target of a root dynamic-update-slice is aliased: charge the
+        update size (write side is handled by the caller via out bytes)."""
+        if comp_name in self._fusion_reads:
+            return self._fusion_reads[comp_name]
+        comp = self.comps.get(comp_name)
+        reads: Dict[int, float] = {}
+        if comp is None:
+            self._fusion_reads[comp_name] = reads
+            return reads
+        params: Dict[str, Tuple[int, int]] = {}   # name -> (index, bytes)
+        for op in comp.ops:
+            if op.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", op.rest)
+                idx = int(m.group(1)) if m else len(params)
+                params[op.name] = (idx, op.out_bytes)
+        slicing = {"dynamic-slice", "slice", "gather"}
+        # convert/bitcast/copy are aliases on TPU (fused into consumers):
+        # track them so a param read only through alias->slice chains is
+        # charged the slice size, not the full buffer.
+        alias_of: Dict[str, str] = {}
+        use_bytes: Dict[str, List[float]] = {n: [] for n in params}
+        full: Dict[str, bool] = {n: False for n in params}
+
+        def resolve(n: str) -> Optional[str]:
+            seen = set()
+            while n in alias_of and n not in seen:
+                seen.add(n)
+                n = alias_of[n]
+            return n if n in params else None
+
+        for op in comp.ops:
+            if op.opcode == "parameter":
+                continue
+            names = re.findall(r"%([\w.\-_]+)", _operand_section(op.rest))
+            if op.opcode in ("convert", "bitcast", "copy") and len(names) == 1:
+                root = names[0] if names[0] in params else \
+                    (resolve(names[0]) or names[0])
+                alias_of[op.name] = names[0]
+                continue
+            for n in names:
+                root = n if n in params else resolve(n)
+                if root is None:
+                    continue
+                if op.opcode in slicing:
+                    use_bytes[root].append(float(op.out_bytes))
+                elif op.opcode == "dynamic-update-slice" and \
+                        names and (names[0] == n):
+                    # aliased in-place target: reads ~ update size
+                    use_bytes[root].append(0.0)
+                else:
+                    full[root] = True
+        for n, (idx, nbytes) in params.items():
+            if full[n]:
+                reads[idx] = float(nbytes)
+            elif use_bytes[n]:
+                reads[idx] = float(sum(use_bytes[n]))
+            else:
+                reads[idx] = float(nbytes)   # unused/unknown: conservative
+        self._fusion_reads[comp_name] = reads
+        return reads
+
+    def _fusion_io_bytes(self, op: Op, called: Optional[str],
+                         symtab: Dict[str, str]) -> float:
+        reads = self._param_reads(called) if called else {}
+        names = re.findall(r"%([\w.\-_]+)", _operand_section(op.rest))
+        total = 0.0
+        for i, n in enumerate(names):
+            if i in reads:
+                total += reads[i]
+            elif n in symtab:
+                total += _shape_elems_bytes(symtab[n])[1]
+        # output: a root dynamic-update-slice is in-placed -> update bytes
+        # (following convert/copy/bitcast wrappers around the root)
+        comp = self.comps.get(called or "")
+        root_dus = None
+        if comp and comp.ops:
+            by_name = {o.name: o for o in comp.ops}
+            root = comp.ops[-1]
+            for _ in range(4):
+                if root.opcode in ("convert", "copy", "bitcast"):
+                    names = re.findall(r"%([\w.\-_]+)",
+                                       _operand_section(root.rest))
+                    if names and names[0] in by_name:
+                        root = by_name[names[0]]
+                        continue
+                break
+            if root.opcode == "dynamic-update-slice":
+                shapes = _operand_shapes(
+                    root.rest, {o.name: o.shape_str for o in comp.ops})
+                if len(shapes) > 1:
+                    root_dus = _shape_elems_bytes(shapes[1])[1]
+        total += root_dus if root_dus is not None else op.out_bytes
+        return total
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry.name, top_level=True)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, top_level: bool) -> Cost:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        symtab = {op.name: op.shape_str for op in comp.ops}
+        for op in comp.ops:
+            total += self._op_cost(op, symtab, top_level)
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, op: Op, symtab: Dict[str, str],
+                 top_level: bool) -> Cost:
+        oc = op.opcode
+        c = Cost()
+
+        if oc == "while":
+            body = _called_comp(op.rest, "body")
+            trip = _trip_count(op, self.comps)
+            inner = self._comp_cost(body, top_level=True) if body else Cost()
+            return inner.scaled(trip)
+        if oc == "fusion":
+            called = _called_comp(op.rest, "calls")
+            inner = self._comp_cost(called, top_level=False) if called else Cost()
+            c.flops = inner.flops
+            c.coll_bytes = inner.coll_bytes
+            c.coll_by_op = dict(inner.coll_by_op)
+            if top_level:
+                c.bytes = self._fusion_io_bytes(op, called, symtab)
+            return c
+        if oc in ("call", "conditional", "async-start"):
+            for keyn in ("to_apply", "calls", "branch_computations",
+                         "called_computation"):
+                called = _called_comp(op.rest, keyn)
+                if called:
+                    return self._comp_cost(called, top_level)
+            return c
+
+        # ---- collectives -------------------------------------------------
+        for coll in _COLLECTIVES:
+            if oc == coll or oc == coll + "-start":
+                c.coll_bytes = float(op.out_bytes)
+                c.coll_by_op[coll] = float(op.out_bytes)
+                if top_level:
+                    c.bytes = float(op.out_bytes) * 2
+                return c
+        if any(oc.startswith(coll) and oc.endswith("-done")
+               for coll in _COLLECTIVES):
+            return c
+
+        # ---- flops -------------------------------------------------------
+        if oc == "dot":
+            c.flops = _dot_flops(op, symtab)
+        elif oc in _ELEMENTWISE:
+            c.flops = float(op.out_elems)
+        elif oc in ("reduce", "reduce-window"):
+            ins = sum(_shape_elems_bytes(s)[0]
+                      for s in _operand_shapes(op.rest, symtab)) / 2
+            c.flops = float(max(ins, op.out_elems))
+        elif oc == "convolution":
+            # rough: 2 * out_elems * (kernel elems) — no convs in our models
+            c.flops = 2.0 * op.out_elems
+
+        # ---- bytes (top level only; fusion internals are on-chip) --------
+        if top_level:
+            if oc == "dynamic-update-slice":
+                shapes = _operand_shapes(op.rest, symtab)
+                upd = _shape_elems_bytes(shapes[1])[1] if len(shapes) > 1 else 0
+                c.bytes = 2.0 * upd
+            elif oc in ("gather", "dynamic-slice"):
+                c.bytes = 2.0 * op.out_bytes
+            elif oc == "scatter":
+                shapes = _operand_shapes(op.rest, symtab)
+                upd = _shape_elems_bytes(shapes[-1])[1] if shapes else 0
+                c.bytes = 2.0 * upd
+            elif oc in ("dot", "concatenate", "pad", "sort", "reverse",
+                        "convolution", "select-and-scatter"):
+                # genuine HBM movers even under TPU fusion: matmul operands/
+                # outputs and data-rearranging ops
+                opb = sum(_shape_elems_bytes(s)[1]
+                          for s in _operand_shapes(op.rest, symtab))
+                c.bytes = float(opb + op.out_bytes)
+            else:
+                # TPU fusion model: elementwise / select / reduce / broadcast
+                # / transpose / reshape / convert / copy chains fuse into
+                # producers+consumers and never round-trip HBM. The CPU
+                # backend materializes them as top-level ops; charging them
+                # would triple-count every dot-adjacent tensor (documented
+                # CPU-vs-TPU delta; see DESIGN.md §9 and tests).
+                c.bytes = 0.0
+        return c
+
+
+def analyze(hlo: str) -> Cost:
+    return Analyzer(hlo).cost()

@@ -1,0 +1,53 @@
+"""Batched serving engine: preallocated KV caches, prefill + jitted decode
+loop, greedy or temperature sampling."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 -> greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, key, logits):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        """batch['tokens']: (B, P) prompts (+ stub-frontend aux inputs).
+        Returns (B, P + max_new_tokens) token matrix."""
+        tokens = batch["tokens"]
+        B, P = tokens.shape
+        total = P + self.cfg.max_new_tokens
+        caches = self.model.init_cache(B, total)
+        logits, caches = self._prefill(self.params, batch, caches)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = [tokens]
+        cur = self._sample(key, logits[:, -1, :])[:, None]
+        for t in range(self.cfg.max_new_tokens - 1):
+            out.append(cur)
+            logits, caches = self._decode(self.params, caches, cur,
+                                          jnp.int32(P + t))
+            key = jax.random.fold_in(key, t)
+            cur = self._sample(key, logits[:, -1, :])[:, None]
+        out.append(cur)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,94 @@
+"""Training step: microbatched gradient accumulation, optional SMP-PCA
+gradient compression (tap path or A=I baseline path), AdamW update.
+
+The microbatch loop is a lax.scan, so with tap-compression enabled the
+sketch taps ACCUMULATE across microbatches — the one-pass streaming claim of
+the paper applied to gradient accumulation (the full dW never exists)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import grad_compression as gc
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.train import sketched_dense as sd
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    compression: str = "none"          # none | lowrank | taps
+    comp_cfg: gc.CompressionConfig = gc.CompressionConfig()
+    tap_cfg: sd.TapConfig = sd.TapConfig()
+    dp_axis: Optional[str] = None      # set inside shard_map DP training
+    n_workers: int = 1
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    comp: Any                          # gc.CompressionState or ()
+    step: jax.Array
+    key: jax.Array
+
+
+def init_state(key: jax.Array, params, optimizer: AdamW,
+               tcfg: TrainConfig) -> TrainState:
+    comp = ()
+    if tcfg.compression == "lowrank":
+        comp = gc.init_state(params)
+    return TrainState(params, optimizer.init(params), comp,
+                      jnp.zeros((), jnp.int32), key)
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def sp(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(loss_fn: Callable, optimizer: AdamW, tcfg: TrainConfig):
+    """loss_fn(params, microbatch) -> scalar. Returns jit-able step fn."""
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, Dict]:
+        mbs = _split_microbatches(batch, tcfg.microbatches)
+
+        def mb_body(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params)
+        (gsum, lsum), _ = jax.lax.scan(mb_body, (zeros, jnp.float32(0.0)), mbs)
+        grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+        loss = lsum / tcfg.microbatches
+
+        key_step = jax.random.fold_in(state.key, state.step)
+        comp_state = state.comp
+        stats: Dict[str, Any] = {}
+        if tcfg.compression == "lowrank":
+            grads, comp_state, stats = gc.compress_grads(
+                key_step, grads, state.comp, tcfg.comp_cfg,
+                axis=tcfg.dp_axis, n_workers=tcfg.n_workers)
+        elif tcfg.compression == "taps":
+            grads = sd.decompress_tapped_grads(key_step, grads, tcfg.tap_cfg)
+        elif tcfg.dp_axis is not None:
+            grads = jax.lax.pmean(grads, tcfg.dp_axis)
+
+        gnorm = global_norm(grads)
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        new_state = TrainState(params, opt, comp_state, state.step + 1,
+                               state.key)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": optimizer._lr(opt.step), **stats}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Training loop with production fault-tolerance mechanics:
+
+* checkpoint/restart (atomic, keep-N, resume from latest on boot),
+* failure recovery: a step exception rolls back to the last checkpoint and
+  replays (the data pipeline is a pure function of step, so replay is exact),
+* straggler watchdog: per-step wall time vs. a running median; slow steps are
+  logged (on real fleets this feeds the coordinator's preemption logic; the
+  interface is the same here),
+* deterministic skip-ahead: resuming at step k consumes batch(k) directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.optim.adamw import AdamW
+from repro.train import train_step as ts
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    max_retries: int = 2
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, optimizer: AdamW,
+                 data, tcfg: ts.TrainConfig, cfg: TrainerConfig,
+                 init_params_fn: Callable[[jax.Array], Any],
+                 seed: int = 0):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.data = data
+        self.tcfg = tcfg
+        self.cfg = cfg
+        self.init_params_fn = init_params_fn
+        self.seed = seed
+        self.step_fn = jax.jit(ts.make_train_step(loss_fn, optimizer, tcfg))
+        self.metrics_history: List[Dict] = []
+        self.straggler_events: List[int] = []
+
+    # ------------------------------------------------------------------
+    def _fresh_state(self) -> ts.TrainState:
+        key = jax.random.PRNGKey(self.seed)
+        params = self.init_params_fn(jax.random.fold_in(key, 1))
+        return ts.init_state(jax.random.fold_in(key, 2), params,
+                             self.optimizer, self.tcfg)
+
+    def _restore_or_init(self) -> ts.TrainState:
+        state = self._fresh_state()
+        if self.cfg.ckpt_dir and checkpoint.latest_step(self.cfg.ckpt_dir) is not None:
+            state = checkpoint.restore(self.cfg.ckpt_dir, state)
+            log.info("restored checkpoint at step %d", int(state.step))
+        return state
+
+    # ------------------------------------------------------------------
+    def run(self, fault_hook: Optional[Callable[[int], None]] = None
+            ) -> ts.TrainState:
+        """fault_hook(step): test hook that may raise to simulate node
+        failure; the trainer recovers from the last checkpoint."""
+        state = self._restore_or_init()
+        retries = 0
+        times: List[float] = []
+        step = int(state.step)
+        while step < self.cfg.num_steps:
+            batch = self.data.batch(step)
+            t0 = time.monotonic()
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                state, metrics = self.step_fn(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()
+                           if np.ndim(v) == 0}
+            except Exception as e:  # noqa: BLE001 — node-failure recovery
+                retries += 1
+                if retries > self.cfg.max_retries:
+                    raise
+                log.warning("step %d failed (%s); restoring last checkpoint",
+                            step, e)
+                state = self._restore_or_init()
+                step = int(state.step)
+                continue
+            dt = time.monotonic() - t0
+            times.append(dt)
+            med = float(np.median(times[-20:]))
+            if len(times) > 5 and dt > self.cfg.straggler_factor * med:
+                self.straggler_events.append(step)
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, dt, med)
+            if step % self.cfg.log_every == 0:
+                log.info("step %d: %s", step, metrics)
+            self.metrics_history.append({"step": step, **metrics})
+            step += 1
+            if (self.cfg.ckpt_dir and step % self.cfg.ckpt_every == 0):
+                checkpoint.save(self.cfg.ckpt_dir, step, state,
+                                keep=self.cfg.keep)
+        if self.cfg.ckpt_dir:
+            checkpoint.save(self.cfg.ckpt_dir, step, state, keep=self.cfg.keep)
+        return state

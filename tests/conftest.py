@@ -1,0 +1,32 @@
+"""Shared pytest fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; multi-device tests spawn subprocesses
+with their own flags (tests/dist/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def planted_pair(key, d, n, decay=1.0, corr=None):
+    """Synthetic (A, B) = G @ D with D_ii = 1/i^decay (the paper's generator).
+
+    corr=None -> independent A, B; corr=sigma -> B = A + sigma * noise
+    (columns drawn from a cone, the paper's favourable regime)."""
+    kA, kB = jax.random.split(key)
+    D = jnp.diag(1.0 / jnp.arange(1.0, n + 1.0) ** decay)
+    A = jax.random.normal(kA, (d, n)) @ D
+    if corr is None:
+        B = jax.random.normal(kB, (d, n)) @ D
+    else:
+        B = A + corr * jax.random.normal(kB, (d, n)) @ D
+    return A, B

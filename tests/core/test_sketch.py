@@ -1,0 +1,130 @@
+"""Step-1 tests: JL guarantees, SRHT, streaming-order invariance, merging."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from tests.conftest import planted_pair
+
+
+def test_gaussian_pi_scale(key):
+    Pi = core.gaussian_pi(key, 64, 512)
+    # E||Pi x||^2 = ||x||^2
+    x = jnp.ones((512,))
+    assert abs(float(jnp.sum((Pi @ x) ** 2)) / 512.0 - 1.0) < 0.5
+
+
+def test_sketch_preserves_norms_statistically(key):
+    A, B = planted_pair(key, 1024, 50)
+    s = core.sketch_summary(key, A, B, k=256)
+    sk_norms = jnp.linalg.norm(s.A_sketch, axis=0)
+    rel = np.asarray(jnp.abs(sk_norms - s.norm_A) / s.norm_A)
+    assert rel.mean() < 0.15  # eps ~ 1/sqrt(k)
+
+
+def test_column_norms_exact(key):
+    A, B = planted_pair(key, 200, 30)
+    s = core.sketch_summary(key, A, B, k=16)
+    np.testing.assert_allclose(
+        np.asarray(s.norm_A), np.linalg.norm(np.asarray(A), axis=0), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.norm_B), np.linalg.norm(np.asarray(B), axis=0), rtol=1e-5)
+
+
+def test_fwht_is_orthogonal_involution(key):
+    x = jax.random.normal(key, (64, 7))
+    y = core.fwht(core.fwht(x, axis=0), axis=0) / 64.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+def test_fwht_matches_hadamard_matrix(key):
+    d = 16
+    H = np.array([[1.0]])
+    while H.shape[0] < d:
+        H = np.block([[H, H], [H, -H]])
+    x = np.asarray(jax.random.normal(key, (d, 3)))
+    np.testing.assert_allclose(np.asarray(core.fwht(jnp.array(x), axis=0)),
+                               H @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_srht_preserves_dot_products(key):
+    A, B = planted_pair(key, 500, 40, corr=0.5)
+    s = core.sketch_summary(key, A, B, k=256, method="srht")
+    exact = np.asarray(A.T @ B)
+    approx = np.asarray(s.A_sketch.T @ s.B_sketch)
+    scale = np.linalg.norm(np.asarray(A), axis=0)[:, None] * \
+        np.linalg.norm(np.asarray(B), axis=0)[None, :]
+    assert np.mean(np.abs(exact - approx) / scale) < 0.1
+
+
+def test_streaming_order_invariance(key):
+    """The paper's arbitrary-order claim: permuting the row stream leaves the
+    one-pass summary numerically unchanged."""
+    d, n = 256, 20
+    A, B = planted_pair(key, d, n)
+    idx = jnp.arange(d)
+    perm = jax.random.permutation(jax.random.fold_in(key, 7), d)
+    s1 = core.streamed_rows_summary(key, idx, A, B, k=32)
+    s2 = core.streamed_rows_summary(key, perm, A[perm], B[perm], k=32)
+    np.testing.assert_allclose(np.asarray(s1.A_sketch), np.asarray(s2.A_sketch),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1.norm_A), np.asarray(s2.norm_A),
+                               rtol=1e-5)
+
+
+def test_sketch_pass_matches_streamed(key):
+    """Block-streamed pass == row-streamed pass (same per-row Pi derivation)."""
+    d, n = 512, 16
+    A, B = planted_pair(key, d, n)
+    s_blk = core.sketch_pass(key, A, B, k=32, block=128)
+    s_str = core.streamed_rows_summary(key, jnp.arange(d), A, B, k=32)
+    np.testing.assert_allclose(np.asarray(s_blk.A_sketch),
+                               np.asarray(s_str.A_sketch), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_blk.norm_B),
+                               np.asarray(s_str.norm_B), rtol=1e-5)
+
+
+def test_merge_summaries_is_shard_concat(key):
+    d, n = 400, 12
+    A, B = planted_pair(key, d, n)
+    full = core.streamed_rows_summary(key, jnp.arange(d), A, B, k=16)
+    half1 = core.streamed_rows_summary(key, jnp.arange(0, 200), A[:200], B[:200], k=16)
+    half2 = core.streamed_rows_summary(key, jnp.arange(200, 400), A[200:], B[200:], k=16)
+    merged = core.merge_summaries(half1, half2)
+    np.testing.assert_allclose(np.asarray(merged.A_sketch),
+                               np.asarray(full.A_sketch), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(merged.norm_A),
+                               np.asarray(full.norm_A), rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(d=st.sampled_from([64, 128, 257]), n=st.integers(2, 24),
+       k=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1))
+def test_property_sketch_linearity(d, n, k, seed):
+    """sketch(aA1 + bA2) == a sketch(A1) + b sketch(A2) for a fixed Pi —
+    the linearity that makes the distributed psum aggregation exact."""
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    A1 = jax.random.normal(k1, (d, n))
+    A2 = jax.random.normal(k2, (d, n))
+    Pi = core.gaussian_pi(kk, k, d)
+    lhs = Pi @ (2.0 * A1 - 0.5 * A2)
+    rhs = 2.0 * (Pi @ A1) - 0.5 * (Pi @ A2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(4, 40), seed=st.integers(0, 2**31 - 1))
+def test_property_norm_merge_pythagorean(n, seed):
+    """Column norms of disjoint row shards combine in quadrature."""
+    kk = jax.random.PRNGKey(seed)
+    A = jax.random.normal(kk, (100, n))
+    B = jax.random.normal(jax.random.fold_in(kk, 1), (100, n))
+    s1 = core.streamed_rows_summary(kk, jnp.arange(0, 50), A[:50], B[:50], k=4)
+    s2 = core.streamed_rows_summary(kk, jnp.arange(50, 100), A[50:], B[50:], k=4)
+    merged = core.merge_summaries(s1, s2)
+    np.testing.assert_allclose(np.asarray(merged.norm_A),
+                               np.linalg.norm(np.asarray(A), axis=0), rtol=1e-4)

@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel vs naive oracle (interpret mode runs the
+exact TPU kernel body; scratch-based online softmax across k-blocks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as raw_flash
+
+
+def _oracle(q, k, v, causal=True):
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    out = ref.flash_attention_ref(fold(q), fold(jnp.repeat(k, rep, axis=2)),
+                                  fold(jnp.repeat(v, rep, axis=2)),
+                                  causal=causal)
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,Dh", [
+    (1, 128, 2, 2, 32), (2, 256, 4, 2, 64), (1, 512, 2, 1, 128),
+    (1, 384, 3, 3, 64),     # S not a multiple of 256
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(B, S, H, Hkv, Dh, dtype):
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, Dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, Dh),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, Dh),
+                          jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = _oracle(q, k, v, causal=True)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_noncausal():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 256, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 32))
+    got = ops.flash_attention(q, k, v, causal=False)
+    want = _oracle(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_flash_block_shape_independence():
+    key = jax.random.PRNGKey(3)
+    BH, S, Dh = 2, 512, 64
+    q = jax.random.normal(key, (BH, S, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, Dh))
+    o1 = raw_flash(q, k, v, causal=True, bq=128, bk=128)
+    o2 = raw_flash(q, k, v, causal=True, bq=64, bk=256)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(s_blocks=st.integers(1, 4), dh=st.sampled_from([32, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_flash_rows_are_convex_combinations(s_blocks, dh, seed):
+    """Causal flash output rows lie in the convex hull of V rows (softmax
+    weights sum to 1) — checked via max-bound."""
+    key = jax.random.PRNGKey(seed)
+    S = 128 * s_blocks
+    q = jax.random.normal(key, (1, S, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, dh))
+    out = raw_flash(q, k, v, causal=True)
+    vmax = float(jnp.max(jnp.abs(v)))
+    assert float(jnp.max(jnp.abs(out))) <= vmax + 1e-4
