@@ -72,7 +72,7 @@ def fig2a_rescaled_jl(key):
     true = jnp.sum(x * y, axis=0)
 
     def run():
-        s = core.sketch_summary(ks, x, y, k=k)
+        s = core.build_summary(ks, x, y, k)
         idx = jnp.arange(npairs)
         return (est.rescaled_entries(s, idx, idx),
                 est.plain_jl_entries(s, idx, idx))
@@ -94,7 +94,7 @@ def fig2b_cone(key):
         M = A.T @ B
 
         def run():
-            s = core.sketch_summary(key, A, B, k=k)
+            s = core.build_summary(key, A, B, k)
             plain = s.A_sketch.T @ s.B_sketch
             resc = est.rescaled_matrix(s)
             return (jnp.linalg.norm(M - plain, ord=2),
@@ -276,6 +276,24 @@ def kernel_sketch_fused(key):
     return us, err, "interpret-mode correctness"
 
 
+def summary_backends(key):
+    """SummaryEngine backend sweep on one (d, n) pair: per-backend wall time
+    plus the worst cross-backend deviation from the reference summary
+    (derived = that max parity error; the engine's contract says it is float
+    reassociation only)."""
+    d, n, k = 8192, 256, 128
+    A, B = _gd_pair(key, d, n, corr=0.3)
+    ref_s = core.build_summary(key, A, B, k, backend="reference")
+    times, err = {}, 0.0
+    for backend in ("reference", "scan", "pallas"):
+        s, us = _timed(lambda b=backend: core.build_summary(
+            key, A, B, k, backend=b, block=1024), reps=3)
+        times[backend] = us
+        err = max(err, float(jnp.max(jnp.abs(s.A_sketch - ref_s.A_sketch))))
+    notes = " ".join(f"{b}_ms={t/1e3:.1f}" for b, t in times.items())
+    return times["scan"], err, notes
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -287,6 +305,7 @@ BENCHES = [
     ("fig4c_orthogonal", fig4c_orthogonal),
     ("grad_compression", grad_compression),
     ("kernel_sketch_fused", kernel_sketch_fused),
+    ("summary_backends", summary_backends),
 ]
 
 

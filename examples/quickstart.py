@@ -1,6 +1,33 @@
 """Quickstart: single-pass PCA of a matrix product in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Choosing a summary backend
+--------------------------
+Step 1 (the one pass over A, B) goes through one entry point,
+``core.build_summary(key, A, B, k, method=..., backend=...)``, and every
+backend produces the same summary for the same key (identical
+(key, global_row_index) randomness — parity-tested in
+tests/core/test_summary_engine.py):
+
+* ``reference``   — materialize the (k, d) operator, one dense matmul.
+      Simplest; fine whenever (k, d) fits in memory.
+* ``scan``        — stream row blocks, regenerating each block's operator
+      slice on the fly. Use when d is huge (the operator never exists).
+* ``rows``        — arbitrary-order row streams via ``core.rows_summary``:
+      rows arrive as (global index, A row, B row) chunks, merge partial
+      summaries with ``core.merge_summaries``.
+* ``pallas``      — fused TPU kernels (sketch + norms in one HBM pass;
+      SRHT via the blocked-FWHT MXU kernel). Fastest on accelerators;
+      runs interpreted on CPU so the same code path is CI-tested.
+* ``distributed`` — rows sharded over a mesh axis (pass mesh=/axis=);
+      one psum aggregates the shards (Spark treeAggregate as collectives).
+
+``method`` is 'gaussian' (analyzed in the paper) or 'srht' (the paper's
+Spark choice); both work on every backend. Pass stacked (L, d, n) inputs to
+sketch L pairs in one vmapped dispatch, and ``precision='bf16'`` for
+bf16-in/f32-accumulate on accelerators. ``core.smppca(...)`` forwards
+``method``/``backend``/``precision`` straight through.
 """
 import math
 
@@ -17,14 +44,22 @@ D = jnp.diag(1.0 / jnp.arange(1.0, n + 1.0))
 A = jax.random.normal(key, (d, n)) @ D
 B = A + 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (d, n)) @ D
 
-# one pass: sketches + column norms; then sample, estimate, complete
+# one pass: sketches + column norms; then sample, estimate, complete.
+# backend="scan" streams row blocks — the (k, d) operator is never built
+# (swap in "reference", "pallas", ... freely: same key -> same summary)
 result = core.smppca(
     key, A, B,
     r=r,                                 # target rank
     k=256,                               # sketch size (Thm 3.1: eta ~ 1/sqrt k)
     m=int(10 * n * r * math.log(n)),     # samples (Fig 4a: >= nr log n)
     T=8,                                 # WAltMin iterations
+    backend="scan",
 )
+
+# the same pass is available standalone — e.g. sketch once, complete later:
+summary = core.build_summary(key, A, B, 256, backend="scan")
+print(f"summary: sketches {summary.A_sketch.shape} + "
+      f"{summary.n1 + summary.n2} norms")
 
 err, opt = core.spectral_error_vs_optimal(A, B, r, result.factors)
 print(f"SMP-PCA spectral error : {float(err):.4f}")

@@ -17,13 +17,16 @@ key = jax.random.PRNGKey(0)
 d, n1, n2, rank = 8192, 300, 200, 4
 
 # --- one pass over a shuffled stream of (user row) observations ------------
+# the engine's 'rows' path: each chunk's summary depends only on
+# (key, global row ids), so arrival order is irrelevant and partial
+# summaries merge exactly (pass method="srht" with d_total=d for SRHT)
 summary = None
 rows_seen = 0
 for row_ids, A_rows, B_rows in cooccurrence_stream(
         seed=0, d=d, n1=n1, n2=n2, rank=rank, chunk=1024):
-    part = core.streamed_rows_summary(
+    part = core.rows_summary(
         key, jnp.asarray(row_ids), jnp.asarray(A_rows), jnp.asarray(B_rows),
-        k=192)
+        192)
     summary = part if summary is None else core.merge_summaries(summary, part)
     rows_seen += len(row_ids)
 print(f"streamed {rows_seen} rows in arbitrary order; "

@@ -1,7 +1,8 @@
 """repro.core — Single-Pass PCA of Matrix Products (SMP-PCA, NIPS 2016).
 
 Public API:
-    sketch_summary / sketch_pass / streamed_rows_summary  (step 1)
+    build_summary / rows_summary                          (step 1: the engine)
+    sketch_summary / sketch_pass / streamed_rows_summary  (step 1, legacy wrappers)
     sample_entries / q_probabilities                      (step 2a, Eq 1)
     rescaled_entries / rescaled_matrix                    (step 2b, Eq 2)
     waltmin                                               (step 3, Alg 2)
@@ -14,6 +15,9 @@ from repro.core.types import (
 from repro.core.sketch import (
     column_norms, fwht, gaussian_pi, merge_summaries, pi_rows, sketch_pass,
     sketch_summary, srht_sketch, streamed_rows_summary)
+from repro.core.summary_engine import (
+    backends, build_summary, identity_product_summary, projection_rows,
+    register_backend, rows_summary, srht_plan, tap_pair_summary)
 from repro.core.sampling import (
     q_at, q_probabilities, sample_entries, sample_entries_binomial, split_omega)
 from repro.core.estimator import (

@@ -15,7 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import sketch
+from repro.core import summary_engine
 from repro.core.types import LowRankFactors, SketchSummary
 
 
@@ -44,12 +44,14 @@ def _implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
     return LowRankFactors(Q @ (Ub[:, :r] * s[:r]), Vt[:r].T)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "k", "method"))
+@functools.partial(jax.jit, static_argnames=("r", "k", "method", "backend"))
 def sketch_svd(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
-               method: str = "gaussian") -> LowRankFactors:
+               method: str = "gaussian",
+               backend: str = "reference") -> LowRankFactors:
     """SVD(A~^T B~) via power iteration on the implicit product of sketches."""
     k_sketch, k_pow = jax.random.split(key)
-    summary = sketch.sketch_summary(k_sketch, A, B, k, method=method)
+    summary = summary_engine.build_summary(k_sketch, A, B, k, method=method,
+                                           backend=backend)
     As, Bs = summary.A_sketch, summary.B_sketch
     return _implicit_topr(
         lambda X: As.T @ (Bs @ X),

@@ -20,7 +20,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # newer jax promoted it to the top level
+    from jax import shard_map
 
 from repro.core import estimator, sampling
 from repro.core.waltmin import waltmin as _waltmin_fn
@@ -28,30 +32,51 @@ from repro.core.types import LowRankFactors, SketchSummary
 
 
 def distributed_sketch_summary(mesh: Mesh, axis: str, key: jax.Array,
-                               A: jax.Array, B: jax.Array, k: int
+                               A: jax.Array, B: jax.Array, k: int,
+                               method: str = "gaussian",
+                               precision: str | None = None
                                ) -> SketchSummary:
     """One-pass summary with A, B sharded over rows (the d axis) on ``axis``.
 
-    Pi is never materialized globally: each shard generates the rows of Pi for
-    its own global row range from (key, global_row_index) — identical values
-    regardless of the number of shards (tested against the single-device pass).
+    The projection operator is never materialized globally: each shard
+    generates the operator columns for its own global row range from
+    (key, global_row_index) via the SummaryEngine's shared randomness
+    contract — identical values regardless of the number of shards (the
+    srht sign/sample plan is derived from ``key`` alone, so it is the same
+    on every shard). Registered as the engine's 'distributed' backend.
     """
+    from repro.core.summary_engine import (
+        _cast, pi_rows, srht_plan, srht_rows_from_plan)
     n_shards = mesh.shape[axis]
     d = A.shape[0]
     assert d % n_shards == 0, "row dim must divide the mesh axis for this demo"
     shard_rows = d // n_shards
+    if method == "srht":
+        # the plan is shard-independent (derived from key alone); jax's
+        # no-replacement sampler does not trace inside shard_map, so derive
+        # it once here and close over it (replicated on every shard)
+        signs, srows, _ = srht_plan(key, d, k)
+    elif method != "gaussian":
+        raise ValueError(f"unknown sketch method {method!r}")
 
     def local_pass(A_loc, B_loc):
         idx = jax.lax.axis_index(axis)
         row0 = idx * shard_rows
-        gids = (row0 + jnp.arange(shard_rows)).astype(jnp.uint32)
-        Pi_loc = jax.vmap(
-            lambda i: jax.random.normal(jax.random.fold_in(key, i), (k,))
-        )(gids) / jnp.sqrt(k)                       # (rows_loc, k)
-        As = jax.lax.psum(Pi_loc.T @ A_loc, axis)
-        Bs = jax.lax.psum(Pi_loc.T @ B_loc, axis)
-        na2 = jax.lax.psum(jnp.sum(A_loc ** 2, axis=0), axis)
-        nb2 = jax.lax.psum(jnp.sum(B_loc ** 2, axis=0), axis)
+        gids = row0 + jnp.arange(shard_rows)
+        if method == "gaussian":
+            P_loc = pi_rows(key, gids, k)
+        else:
+            P_loc = srht_rows_from_plan(signs[gids], srows, gids, k)
+        Ac = _cast(A_loc, precision)
+        Bc = _cast(B_loc, precision)
+        dot = lambda X: jax.lax.dot_general(
+            _cast(P_loc, precision).astype(X.dtype), X,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        As = jax.lax.psum(dot(Ac), axis)
+        Bs = jax.lax.psum(dot(Bc), axis)
+        na2 = jax.lax.psum(jnp.sum(Ac.astype(jnp.float32) ** 2, axis=0), axis)
+        nb2 = jax.lax.psum(jnp.sum(Bc.astype(jnp.float32) ** 2, axis=0), axis)
         return SketchSummary(As, Bs, jnp.sqrt(na2), jnp.sqrt(nb2))
 
     fn = shard_map(
@@ -63,13 +88,15 @@ def distributed_sketch_summary(mesh: Mesh, axis: str, key: jax.Array,
 
 
 def distributed_smppca(mesh: Mesh, axis: str, key: jax.Array, A: jax.Array,
-                       B: jax.Array, *, r: int, k: int, m: int, T: int = 10
-                       ) -> LowRankFactors:
+                       B: jax.Array, *, r: int, k: int, m: int, T: int = 10,
+                       method: str = "gaussian") -> LowRankFactors:
     """Full distributed pipeline. Steps 2-3 run replicated (they are o(n k + m
     r^2 T) — negligible next to the pass) after the single all-reduced pass;
     every device computes identical factors (same seed), mirroring the
     every-worker-completes design of the gradient compressor."""
+    from repro.core.summary_engine import build_summary
     k1, k2 = jax.random.split(key)
-    summary = distributed_sketch_summary(mesh, axis, k1, A, B, k)
+    summary = build_summary(k1, A, B, k, method=method, backend="distributed",
+                            mesh=mesh, axis=axis)
     from repro.core.smppca import smppca_from_summary
     return smppca_from_summary(k2, summary, r=r, m=m, T=T).factors

@@ -13,9 +13,6 @@ dimension). Supports:
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -93,68 +90,32 @@ def srht_sketch(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# One-pass summaries
+# One-pass summaries — thin wrappers over the SummaryEngine (kept for API
+# compatibility; the implementations are registered backends in
+# repro.core.summary_engine)
 # ---------------------------------------------------------------------------
 
 def column_norms(X: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(X.astype(jnp.float32) ** 2, axis=0))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "method"))
 def sketch_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int,
                    method: str = "gaussian") -> SketchSummary:
-    """Direct (materialized-Pi) summary; the semantic reference."""
-    if method == "gaussian":
-        d = A.shape[0]
-        Pi = gaussian_pi(key, k, d, A.dtype)
-        As, Bs = Pi @ A, Pi @ B
-    elif method == "srht":
-        As, Bs = srht_sketch(key, A, k), srht_sketch(key, B, k)
-    else:
-        raise ValueError(f"unknown sketch method {method!r}")
-    return SketchSummary(As, Bs, column_norms(A), column_norms(B))
+    """Direct (materialized-operator) summary == engine 'reference' backend."""
+    from repro.core.summary_engine import build_summary
+    return build_summary(key, A, B, k, method=method, backend="reference")
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block"))
 def sketch_pass(key: jax.Array, A: jax.Array, B: jax.Array, k: int,
                 block: int = 1024) -> SketchSummary:
-    """Single streaming pass over row blocks of A and B (Gaussian Pi).
+    """Block-streamed single pass == engine 'scan' backend (Gaussian Pi).
 
-    Numerically identical to ``sketch_summary(method='gaussian')`` when the
-    per-block Pi slices are the slices of one materialized Pi; here each block
-    regenerates its Pi slice from (key, block index) so the full (k, d) matrix
-    never exists — this is the memory model of the paper's streaming pass and
-    of the fused TPU kernel.
+    Each block regenerates its Pi slice from (key, global row index) so the
+    full (k, d) operator never exists — the memory model of the paper's
+    streaming pass and of the fused TPU kernel.
     """
-    d = A.shape[0]
-    pad = (-d) % block
-    Ap = jnp.pad(A, ((0, pad), (0, 0)))
-    Bp = jnp.pad(B, ((0, pad), (0, 0)))
-    nblk = Ap.shape[0] // block
-    Ablk = Ap.reshape(nblk, block, -1)
-    Bblk = Bp.reshape(nblk, block, -1)
-
-    def body(carry, inputs):
-        As, Bs, na2, nb2 = carry
-        bi, Ab, Bb = inputs
-        Pi_b = jax.vmap(
-            lambda i: jax.random.normal(jax.random.fold_in(key, i), (k,))
-        )((bi * block + jnp.arange(block)).astype(jnp.uint32)) / jnp.sqrt(k)
-        As = As + Pi_b.T @ Ab
-        Bs = Bs + Pi_b.T @ Bb
-        na2 = na2 + jnp.sum(Ab.astype(jnp.float32) ** 2, axis=0)
-        nb2 = nb2 + jnp.sum(Bb.astype(jnp.float32) ** 2, axis=0)
-        return (As, Bs, na2, nb2), None
-
-    init = (
-        jnp.zeros((k, A.shape[1]), jnp.float32),
-        jnp.zeros((k, B.shape[1]), jnp.float32),
-        jnp.zeros((A.shape[1],), jnp.float32),
-        jnp.zeros((B.shape[1],), jnp.float32),
-    )
-    (As, Bs, na2, nb2), _ = jax.lax.scan(
-        body, init, (jnp.arange(nblk), Ablk, Bblk))
-    return SketchSummary(As, Bs, jnp.sqrt(na2), jnp.sqrt(nb2))
+    from repro.core.summary_engine import build_summary
+    return build_summary(key, A, B, k, backend="scan", block=block)
 
 
 def streamed_rows_summary(key: jax.Array, row_idx: jax.Array,
@@ -163,15 +124,10 @@ def streamed_rows_summary(key: jax.Array, row_idx: jax.Array,
     """Arbitrary-order streaming: rows arrive as (index, A row, B row) triples.
 
     The result is independent of arrival order (sketching is a sum over rows).
+    == engine ``rows_summary`` (which additionally supports srht).
     """
-    P = pi_rows(key, row_idx, k)          # (t, k)
-    As = P.T @ A_rows                      # (k, n1)
-    Bs = P.T @ B_rows
-    return SketchSummary(
-        As, Bs,
-        jnp.sqrt(jnp.sum(A_rows ** 2, axis=0)),
-        jnp.sqrt(jnp.sum(B_rows ** 2, axis=0)),
-    )
+    from repro.core.summary_engine import rows_summary
+    return rows_summary(key, row_idx, A_rows, B_rows, k)
 
 
 def merge_summaries(a: SketchSummary, b: SketchSummary) -> SketchSummary:

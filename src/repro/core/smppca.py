@@ -13,19 +13,28 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimator, sampling, sketch
+from repro.core import estimator, sampling, summary_engine
 from repro.core.waltmin import waltmin as _waltmin_fn
 from repro.core.types import LowRankFactors, SampleSet, SketchSummary, SMPPCAResult
 
 
 @functools.partial(jax.jit, static_argnames=("r", "k", "m", "T", "method",
+                                              "backend", "block", "precision",
                                               "use_splits"))
 def smppca(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
            m: int, T: int = 10, method: str = "gaussian",
+           backend: str = "reference", block: int = 1024,
+           precision: str | None = None,
            use_splits: bool = False) -> SMPPCAResult:
-    """Single-pass rank-r PCA of A^T B. A: (d, n1), B: (d, n2)."""
+    """Single-pass rank-r PCA of A^T B. A: (d, n1), B: (d, n2).
+
+    The step-1 pass goes through the SummaryEngine: ``method``/``backend``/
+    ``block``/``precision`` select the sketch and its execution strategy
+    (see ``core.summary_engine.build_summary``)."""
     k_sketch, k_sample, k_als = jax.random.split(key, 3)
-    summary = sketch.sketch_summary(k_sketch, A, B, k, method=method)
+    summary = summary_engine.build_summary(
+        k_sketch, A, B, k, method=method, backend=backend, block=block,
+        precision=precision)
     return smppca_from_summary(
         jax.random.fold_in(k_sample, 0), summary, r=r, m=m, T=T,
         use_splits=use_splits)

@@ -1,0 +1,9 @@
+"""repro.dist — mesh context + path-based sharding rules.
+
+``meshctx``   registers the active mesh for activation constraints
+              (models.transformer.constrain_act) without threading it
+              through every call signature.
+``sharding``  maps parameter / cache pytree paths to PartitionSpecs
+              (fsdp_tp / tp_only policies, divisibility fallbacks).
+"""
+from repro.dist import meshctx, sharding

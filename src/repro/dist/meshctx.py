@@ -1,0 +1,25 @@
+"""Process-global mesh registry.
+
+Model code stays mesh-agnostic: launch code calls ``set_mesh`` once and
+optional activation-sharding constraints look the mesh up here (returning
+None — a no-op — when nothing is registered, e.g. in single-device tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def clear_mesh() -> None:
+    global _MESH
+    _MESH = None

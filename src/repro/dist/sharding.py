@@ -1,0 +1,106 @@
+"""Path-based sharding rules: parameter and KV-cache PartitionSpecs.
+
+Rules are keyed on the pytree *path* (e.g. ``/mlp/up/w``, ``/embed/table``,
+``/groups/0/0/attn/wo/w``) so model code never mentions a mesh. Every rule
+applies a divisibility fallback: an axis that does not divide its mesh axes
+is replicated on that dim instead (e.g. whisper's 12 heads on a 16-way
+model axis).
+
+Conventions:
+* 2D weights are (d_in, d_out): d_in shards over the data-parallel axes
+  (FSDP, ``policy='fsdp_tp'``), d_out over the tensor-parallel axis.
+* ``embed`` tables are (vocab, d_model): vocab over TP, d_model over DP.
+* Stacked layer-group leading dims (scan-over-layers) are never sharded.
+* KV caches (..., B, S, KV, Dh): batch over DP; the TP axis prefers the KV
+  head dim and falls back to head_dim when KV heads do not divide it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+def _as_tuple(axes: Axes) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _axes_size(mesh, axes: Axes) -> int:
+    return math.prod(mesh.shape[a] for a in _as_tuple(axes))
+
+
+def param_spec(mesh, path: str, shape: Tuple[int, ...], *,
+               policy: str = "fsdp_tp", dp: Axes = ("data",),
+               tp: str = "model") -> P:
+    """PartitionSpec for one parameter leaf at ``path`` with ``shape``."""
+    dp = _as_tuple(dp)
+    ndim = len(shape)
+    if ndim < 2:
+        return P(*([None] * ndim))         # biases/scales: replicated
+    spec = [None] * ndim
+    din, dout = ndim - 2, ndim - 1         # leading stacked dims stay None
+    if "embed" in path:
+        if shape[din] % mesh.shape[tp] == 0:
+            spec[din] = tp
+        if shape[dout] % _axes_size(mesh, dp) == 0:
+            spec[dout] = dp
+        return P(*spec)
+    if policy == "fsdp_tp" and shape[din] % _axes_size(mesh, dp) == 0:
+        spec[din] = dp
+    if shape[dout] % mesh.shape[tp] == 0:
+        spec[dout] = tp
+    return P(*spec)
+
+
+def cache_spec(mesh, path: str, shape: Tuple[int, ...], *,
+               dp: Axes = ("data",), tp: str = "model") -> P:
+    """PartitionSpec for a KV-cache leaf shaped (..., B, S, KV, Dh)."""
+    del path
+    dp = _as_tuple(dp)
+    ndim = len(shape)
+    spec = [None] * ndim
+    bdim, kv_dim, dh_dim = ndim - 4, ndim - 2, ndim - 1
+    if bdim >= 0 and shape[bdim] % _axes_size(mesh, dp) == 0:
+        spec[bdim] = dp
+    tp_size = mesh.shape[tp]
+    if shape[kv_dim] % tp_size == 0:
+        spec[kv_dim] = tp
+    elif shape[dh_dim] % tp_size == 0:
+        spec[dh_dim] = tp
+    return P(*spec)
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/" + "/".join(parts)
+
+
+def params_shardings(mesh, shapes, *, policy: str = "fsdp_tp",
+                     dp: Axes = ("data",), tp: str = "model"):
+    """NamedShardings for a whole param-shapes pytree (path-based rules)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, param_spec(mesh, _path_str(kp), leaf.shape,
+                             policy=policy, dp=dp, tp=tp)),
+        shapes)
+
+
+def cache_shardings(mesh, cache, *, dp: Axes = ("data",), tp: str = "model"):
+    """NamedShardings for a KV-cache pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, cache_spec(mesh, _path_str(kp), leaf.shape, dp=dp, tp=tp)),
+        cache)

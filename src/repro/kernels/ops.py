@@ -20,6 +20,12 @@ from repro.core.types import SketchSummary
 
 
 def _interpret() -> bool:
+    """Single source of the interpret policy: compile the Pallas kernels only
+    on TPU; interpret everywhere else. CPU CI still runs the real TPU kernel
+    bodies tile-by-tile. GPU must stay interpreted too: the kernels accumulate
+    across a grid dimension (``out_ref[...] +=`` with a revisited output
+    block), which relies on TPU's sequential grid — Pallas GPU runs grid
+    cells in parallel and would race."""
     return jax.default_backend() != "tpu"
 
 
@@ -32,30 +38,32 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bd"))
+@functools.partial(jax.jit, static_argnames=("bn", "bd", "precision"))
 def sketch_fused(Pi: jax.Array, A: jax.Array, *, bn: int = 256,
-                 bd: int = 512) -> tuple[jax.Array, jax.Array]:
+                 bd: int = 512,
+                 precision: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Fused (Pi @ A, column norms) for arbitrary shapes; pads then crops.
 
-    Zero padding is exact for both outputs (zero rows/cols add nothing)."""
+    Zero padding is exact for both outputs (zero rows/cols add nothing).
+    ``precision='bf16'`` casts the inputs; accumulation stays f32."""
     k, d = Pi.shape
     n = A.shape[1]
     bd_eff = min(bd, _pad_to(A, 0, 8).shape[0])
     Ap = _pad_to(_pad_to(A, 0, bd_eff), 1, bn)
     Pip = _pad_to(Pi, 1, bd_eff)
     out, norm2 = _sketch_fused.sketch_fused(
-        Pip, Ap, bn=bn, bd=bd_eff, interpret=_interpret())
+        Pip, Ap, bn=bn, bd=bd_eff, interpret=_interpret(),
+        precision=precision)
     return out[:, :n], jnp.sqrt(norm2[:n])
 
 
 def sketch_summary_fused(key: jax.Array, A: jax.Array, B: jax.Array,
-                         k: int) -> SketchSummary:
-    """Drop-in kernel-backed replacement for core.sketch.sketch_summary."""
-    from repro.core.sketch import gaussian_pi
-    Pi = gaussian_pi(key, k, A.shape[0], jnp.float32)
-    As, na = sketch_fused(Pi, A)
-    Bs, nb = sketch_fused(Pi, B)
-    return SketchSummary(As, Bs, na, nb)
+                         k: int, method: str = "gaussian",
+                         precision: str | None = None) -> SketchSummary:
+    """Kernel-backed summary == the SummaryEngine's 'pallas' backend."""
+    from repro.core.summary_engine import build_summary
+    return build_summary(key, A, B, k, method=method, backend="pallas",
+                         precision=precision)
 
 
 @jax.jit

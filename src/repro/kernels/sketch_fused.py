@@ -45,14 +45,30 @@ def _kernel(pi_ref, a_ref, out_ref, norm_ref):
         a_tile.astype(jnp.float32) ** 2, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bd", "interpret", "precision"))
 def sketch_fused(Pi: jax.Array, A: jax.Array, *, bn: int = 256, bd: int = 512,
-                 interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                 interpret: bool | None = None,
+                 precision: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Returns (Pi @ A as f32, squared column norms of A as f32 (n,)).
 
     Pi: (k, d), A: (d, n). d must divide by bd and n by bn (callers pad; the
     ops.py wrapper handles padding for arbitrary shapes).
+
+    ``interpret=None`` auto-detects from the platform (one policy for all
+    kernels: ``kernels.ops._interpret`` — compiled on TPU, interpreted
+    elsewhere). ``precision='bf16'`` feeds bf16 tiles to the MXU; both
+    outputs still accumulate in f32 (``preferred_element_type`` / VPU cast
+    in the body).
     """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
+    if precision == "bf16":
+        Pi = Pi.astype(jnp.bfloat16)
+        A = A.astype(jnp.bfloat16)
+    elif precision not in (None, "f32"):
+        raise ValueError(f"unknown precision {precision!r} (None|'f32'|'bf16')")
     k, d = Pi.shape
     d2, n = A.shape
     assert d == d2, (Pi.shape, A.shape)

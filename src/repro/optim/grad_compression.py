@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.smppca import smppca_from_summary
-from repro.core.sketch import gaussian_pi
+from repro.core.summary_engine import identity_product_summary
 from repro.core.types import SketchSummary
 
 
@@ -58,7 +58,9 @@ MIN_DIM = 64
 
 
 def _compressible(leaf) -> bool:
-    return leaf.ndim == 2 and min(leaf.shape) >= MIN_DIM
+    """2D dense-layer grads, or scan-stacked (L, n1, n2) layer groups (the
+    batched engine mode sketches all L layers in one dispatch)."""
+    return leaf.ndim in (2, 3) and min(leaf.shape[-2:]) >= MIN_DIM
 
 
 def init_state(grads_like) -> CompressionState:
@@ -77,26 +79,17 @@ def compress_leaf(key: jax.Array, G: jax.Array, cfg: CompressionConfig,
                   ) -> jax.Array:
     """Compress one gradient matrix via SMP-PCA; returns the rank-r
     reconstruction. ``axis``: inside shard_map, psum the one-pass summary
-    over DP workers (G is then each worker's *local* grad)."""
+    over DP workers (G is then each worker's *local* grad). A stacked
+    (L, n1, n2) layer group compresses all L layers in one batched engine
+    dispatch."""
+    if G.ndim == 3:
+        keys = jax.random.split(key, G.shape[0])
+        return jax.vmap(lambda kk, g: compress_leaf(
+            kk, g, cfg, axis=axis, n_workers=n_workers))(keys, G)
     n1, n2 = G.shape
-    k = cfg.sketch_k
-    if axis is not None:
-        widx = jax.lax.axis_index(axis)
-        pi_key = jax.random.fold_in(key, widx)
-    else:
-        pi_key = key
-    Pi_w = gaussian_pi(pi_key, k, n1)            # (k, n_in)
-    A_sk = Pi_w                                             # A slice = I
-    B_sk = Pi_w @ G.astype(jnp.float32)                     # (k, n_out)
-    nb2 = jnp.sum(G.astype(jnp.float32) ** 2, axis=0)       # (n_out,)
-    if axis is not None:
-        A_sk = jax.lax.psum(A_sk, axis)
-        B_sk = jax.lax.psum(B_sk, axis)
-        nb2 = jax.lax.psum(nb2, axis)
-    summary = SketchSummary(
-        A_sk, B_sk,
-        jnp.full((n1,), jnp.sqrt(float(n_workers)), jnp.float32),
-        jnp.sqrt(nb2))
+    summary = identity_product_summary(
+        key, G.astype(jnp.float32), cfg.sketch_k,
+        axis=axis, n_workers=n_workers)
     res = smppca_from_summary(
         jax.random.fold_in(key, 1), summary, r=cfg.rank,
         m=_m_for(n1, n2, cfg), T=cfg.als_iters)
@@ -133,8 +126,10 @@ def compress_grads(key: jax.Array, grads, state: CompressionState,
             out.append(ghat.astype(g.dtype))
             err_new.append(resid)
             n_comp += 1
-            n1, n2 = g.shape
-            saved_bytes += g.size * 4 - 4 * (cfg.sketch_k * (n1 + n2) + n2)
+            n1, n2 = g.shape[-2:]
+            n_layers = g.shape[0] if g.ndim == 3 else 1
+            saved_bytes += g.size * 4 - \
+                4 * n_layers * (cfg.sketch_k * (n1 + n2) + n2)
         else:
             gg = jax.lax.pmean(g, axis) if axis is not None else g
             out.append(gg)

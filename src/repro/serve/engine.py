@@ -1,13 +1,22 @@
-"""Batched serving engine: preallocated KV caches, prefill + jitted decode
-loop, greedy or temperature sampling."""
+"""Batched serving engines.
+
+``Engine``       — LM serving: preallocated KV caches, prefill + jitted
+                   decode loop, greedy or temperature sampling.
+``SketchService`` — summary serving: shape-bucketed micro-batching front-end
+                   for one-pass (A, B) summary requests, dispatched through
+                   the SummaryEngine's batched (vmapped) mode.
+"""
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.summary_engine import build_summary
+from repro.core.types import SketchSummary
 from repro.models.factory import Model
 
 
@@ -51,3 +60,69 @@ class Engine:
             cur = self._sample(key, logits[:, -1, :])[:, None]
         out.append(cur)
         return jnp.concatenate(out, axis=1)
+
+
+class SketchService:
+    """Micro-batching front-end for one-pass summary requests.
+
+    Serving scenario: many concurrent callers each need the step-1 summary of
+    their own (A, B) pair (per-layer gradients, per-tenant co-occurrence
+    shards, ...). Dispatching them one by one wastes accelerator launches;
+    ``SketchService`` queues requests, buckets them by shape, and flushes each
+    bucket as ONE batched ``build_summary`` dispatch (the engine's vmapped
+    mode), preserving per-request keys — results are bit-identical to
+    dispatching each request alone.
+
+    >>> svc = SketchService(k=128, backend="scan")
+    >>> t0 = svc.submit(key0, A0, B0)
+    >>> t1 = svc.submit(key1, A1, B1)
+    >>> out = svc.flush()          # {ticket: SketchSummary}
+    """
+
+    def __init__(self, k: int = 128, *, method: str = "gaussian",
+                 backend: str = "scan", block: int = 1024,
+                 precision: Optional[str] = None):
+        self.k = k
+        self.method = method
+        self.backend = backend
+        self.block = block
+        self.precision = precision
+        self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array]] = []
+        self._next_ticket = 0
+
+    def submit(self, key: jax.Array, A: jax.Array, B: jax.Array) -> int:
+        """Queue one (A, B) pair under its own key; returns a ticket."""
+        assert A.ndim == 2 and B.ndim == 2 and A.shape[0] == B.shape[0], \
+            (A.shape, B.shape)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, key, A, B))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> Dict[int, SketchSummary]:
+        """One batched engine dispatch per bucket; drains the queue. Buckets
+        key on shapes AND dtypes (of A, B, and the key) so stacking never
+        promotes a request's arrays — results stay identical to solo
+        dispatches."""
+        buckets = collections.defaultdict(list)
+        for ticket, key, A, B in self._queue:
+            sig = (A.shape, str(A.dtype), B.shape, str(B.dtype),
+                   key.shape, str(key.dtype))
+            buckets[sig].append((ticket, key, A, B))
+        self._queue = []
+        out: Dict[int, SketchSummary] = {}
+        for requests in buckets.values():
+            tickets = [r[0] for r in requests]
+            keys = jnp.stack([r[1] for r in requests])
+            A = jnp.stack([r[2] for r in requests])
+            B = jnp.stack([r[3] for r in requests])
+            batched = build_summary(
+                keys, A, B, self.k, method=self.method, backend=self.backend,
+                block=self.block, precision=self.precision)
+            for i, ticket in enumerate(tickets):
+                out[ticket] = jax.tree.map(lambda x: x[i], batched)
+        return out

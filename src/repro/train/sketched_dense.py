@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.smppca import smppca_from_summary
+from repro.core.summary_engine import tap_pair_summary
 from repro.core.types import SketchSummary
 
 
@@ -53,20 +54,14 @@ def tap_init(n_in: int, n_out: int, k: int) -> Dict[str, jax.Array]:
 
 
 def _sketch_pair(key, X, Y, k, block):
-    """One-pass (Pi X, Pi Y, col-norms^2) over X, Y (T x n).
-
-    Single fused contraction over the token dimension: under pjit the
+    """One-pass (Pi X, Pi Y, col-norms^2) over X, Y (T x n) — delegated to
+    the SummaryEngine's tap path (``tap_pair_summary``), which keeps the
+    single fused contraction over the token dimension: under pjit the
     T-sharded contraction produces exactly ONE (k x n) psum per output.
     (The original scan-over-blocks variant made GSPMD emit a partial
-    all-reduce per block — the C1 refutation in EXPERIMENTS.md §Perf.)
-    Pi is (T, k) — 2-byte-per-token-scale, sharded like X, never stored."""
-    T = X.shape[0]
-    Pi = jax.random.normal(key, (T, k)) / jnp.sqrt(k)
-    As = jax.lax.dot_general(Pi, X, (((0,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    Bs = jax.lax.dot_general(Pi, Y, (((0,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    return As, Bs, jnp.sum(X * X, axis=0), jnp.sum(Y * Y, axis=0)
+    all-reduce per block — the C1 refutation in EXPERIMENTS.md §Perf.)"""
+    del block
+    return tap_pair_summary(key, X, Y, k)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))

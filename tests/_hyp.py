@@ -1,0 +1,67 @@
+"""Minimal stand-in for the optional ``hypothesis`` dependency.
+
+Provides exactly the API surface this suite uses — ``given``, ``settings``,
+``strategies.integers``, ``strategies.sampled_from`` — as a deterministic
+property loop, so the tier-1 command runs on a clean interpreter. When real
+hypothesis is installed the tests import it instead (each usage site does
+``try: from hypothesis import ... except ImportError: from tests._hyp ...``).
+
+The fallback draws ``max_examples`` samples per strategy from a PRNG seeded
+by the test name: deterministic across runs, no shrinking, no example
+database — a property *loop*, not a property *search*.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    opts = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(opts))
+
+
+strategies = types.SimpleNamespace(integers=_integers,
+                                   sampled_from=_sampled_from)
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def given(**strats):
+    """Decorator: run the test once per drawn example (deterministic seed).
+
+    The wrapper takes no arguments (all parameters are drawn), matching how
+    this suite uses @given — property tests here never mix in fixtures.
+    """
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(f"repro-hyp:{fn.__module__}:{fn.__name__}")
+            for _ in range(n):
+                drawn = {name: s.draw(rnd) for name, s in strats.items()}
+                fn(**drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(deadline=None, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+    """Records max_examples on the (already-wrapped) test function."""
+    del deadline
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # hypothesis is optional; see tests/_hyp.py
+    from tests._hyp import given, settings, strategies as st
 
 from repro import core
 from repro.core.types import SampleSet

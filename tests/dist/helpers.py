@@ -1,0 +1,34 @@
+"""Subprocess helpers for multi-device tests.
+
+The main pytest process must keep the single real CPU device (see
+tests/conftest.py — no XLA_FLAGS there), so any test that needs a mesh
+spawns a fresh interpreter with ``--xla_force_host_platform_device_count``
+set before jax initializes.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 300) -> str:
+    """Run ``code`` in a subprocess with n_devices fake CPU devices; returns
+    stdout. Raises with both streams attached if the subprocess fails."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

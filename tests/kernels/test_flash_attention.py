@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # hypothesis is optional; see tests/_hyp.py
+    from tests._hyp import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention as raw_flash

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # hypothesis is optional; see tests/_hyp.py
+    from tests._hyp import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.hadamard import hadamard_matrix
@@ -39,8 +42,10 @@ def test_sketch_fused_block_shape_independence():
     A = jax.random.normal(jax.random.fold_in(kk, 1), (640, 192))
     o1, n1 = ops.sketch_fused(Pi, A, bn=64, bd=128)
     o2, n2 = ops.sketch_fused(Pi, A, bn=256, bd=512)
+    # different tilings reassociate the f32 d-accumulation; with d=640 terms
+    # of magnitude O(1) the roundoff floor is a few e-5 absolute
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
-                               atol=1e-5)
+                               atol=5e-5)
     np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), rtol=1e-6)
 
 
