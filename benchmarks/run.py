@@ -1,20 +1,28 @@
-"""Benchmark harness — one benchmark per paper table/figure.
+"""Benchmark harness — one benchmark per paper table/figure, plus the
+EstimationEngine sweep that feeds the perf trajectory.
 
-Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's claim,
-see each docstring). Real datasets (SIFT10K/NIPS-BW/URL) are not
-redistributable offline; spectrum-matched synthetic stand-ins validate the
-paper's *relative* claims (orderings/ratios/trends). CPU container: absolute
-wall times are CPU-relative; ratios are the signal.
+``--suite paper`` (default) prints ``name,us_per_call,derived`` CSV rows
+(derived = the figure's claim, see each docstring). ``--suite estimation``
+runs the ``estimation_backends`` sweep — every EstimationEngine
+(method, backend) cell timed on one summary, spectral error measured against
+the two-pass LELA baseline — and writes machine-readable
+``BENCH_estimation.json`` (``--out``); ``--smoke`` shrinks sizes for CI.
+
+Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
+spectrum-matched synthetic stand-ins validate the paper's *relative* claims
+(orderings/ratios/trends). CPU container: absolute wall times are
+CPU-relative; ratios are the signal.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import math
 import time
 import zlib
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import core
 from repro.core import estimator as est
@@ -294,6 +302,66 @@ def summary_backends(key):
     return times["scan"], err, notes
 
 
+def estimation_backends(key, *, smoke: bool = False) -> dict:
+    """EstimationEngine sweep: every (method, backend) cell on ONE summary.
+
+    Times ``estimate_product`` per cell and measures spectral error against
+    the exact-entry two-pass baseline (LELA = biased sample + exact pass +
+    WAltMin) — the record the acceptance gate reads: backend='jit' must beat
+    the reference Python-loop WAltMin on wall time.
+    """
+    if smoke:
+        d, n, r, k, m, T = 1024, 64, 3, 64, 1200, 4
+    else:
+        d, n, r, k, m, T = 8192, 256, 5, 256, 6000, 8
+    A, B = _gd_pair(key, d, n, corr=0.3)
+    summary = core.build_summary(key, A, B, k, backend="reference")
+    jax.block_until_ready(summary)
+
+    # two-pass baseline: same sampler + WAltMin but exact entries
+    base_f, base_us = _timed(
+        lambda: core.lela(key, A, B, r=r, m=m, T=T), reps=1)
+    base_err = _err(A, B, base_f)
+    baseline = {"name": "lela_two_pass", "us_per_call": base_us,
+                "spectral_error": base_err}
+
+    cells = [
+        ("rescaled_jl", "reference"), ("rescaled_jl", "jit"),
+        ("rescaled_jl", "pallas"),
+        ("lela_waltmin", "jit"),
+        ("direct_svd", "reference"), ("direct_svd", "jit"),
+    ]
+    results = []
+    for method, backend in cells:
+        exact = (A, B) if method == "lela_waltmin" else None
+        reps = 3 if backend == "jit" and not smoke else 1
+
+        def run(method=method, backend=backend, exact=exact):
+            out = core.estimate_product(
+                key, summary, r, method=method, backend=backend, m=m, T=T,
+                exact_pair=exact)
+            return out.factors
+
+        factors, us = _timed(run, reps=reps)
+        results.append({
+            "name": f"{method}/{backend}",
+            "us_per_call": us,
+            "spectral_error": _err(A, B, factors),
+            "baseline_spectral_error": base_err,
+        })
+
+    times = {rec["name"]: rec["us_per_call"] for rec in results}
+    return {
+        "suite": "estimation_backends",
+        "config": {"d": d, "n": n, "r": r, "k": k, "m": m, "T": T,
+                   "smoke": smoke, "backend_platform": jax.default_backend()},
+        "baseline": baseline,
+        "results": results,
+        "jit_speedup_vs_reference":
+            times["rescaled_jl/reference"] / times["rescaled_jl/jit"],
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -309,8 +377,7 @@ BENCHES = [
 ]
 
 
-def main() -> None:
-    key = jax.random.PRNGKey(0)
+def run_paper_suite(key) -> None:
     print("name,us_per_call,derived,notes")
     for name, fn in BENCHES:
         try:
@@ -319,6 +386,37 @@ def main() -> None:
             print(f"{name},{us:.0f},{derived:.4f},{notes}", flush=True)
         except Exception as e:   # noqa: BLE001
             print(f"{name},nan,nan,ERROR {e}", flush=True)
+
+
+def run_estimation_suite(key, out_path: str, smoke: bool) -> None:
+    report = estimation_backends(jax.random.fold_in(
+        key, zlib.crc32(b"estimation_backends") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,us_per_call,spectral_error,baseline_spectral_error")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['us_per_call']:.0f},"
+              f"{rec['spectral_error']:.4f},"
+              f"{rec['baseline_spectral_error']:.4f}", flush=True)
+    print(f"jit_speedup_vs_reference,"
+          f"{report['jit_speedup_vs_reference']:.2f}x", flush=True)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--suite", choices=("paper", "estimation", "all"),
+                   default="paper")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced sizes for CI smoke runs")
+    p.add_argument("--out", default="BENCH_estimation.json",
+                   help="JSON artifact path for the estimation suite")
+    args = p.parse_args()
+    key = jax.random.PRNGKey(0)
+    if args.suite in ("paper", "all"):
+        run_paper_suite(key)
+    if args.suite in ("estimation", "all"):
+        run_estimation_suite(key, args.out, args.smoke)
 
 
 if __name__ == "__main__":

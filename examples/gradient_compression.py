@@ -10,7 +10,6 @@ path tracks the uncompressed curve at ~1/3 of the gradient communication.
 import argparse
 import dataclasses
 
-import jax
 
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM

@@ -28,6 +28,21 @@ Spark choice); both work on every backend. Pass stacked (L, d, n) inputs to
 sketch L pairs in one vmapped dispatch, and ``precision='bf16'`` for
 bf16-in/f32-accumulate on accelerators. ``core.smppca(...)`` forwards
 ``method``/``backend``/``precision`` straight through.
+
+Choosing an estimation method (step 2-3)
+----------------------------------------
+The summary then flows into ``core.estimate_product(key, summary, r,
+method=..., backend=...)`` — the EstimationEngine:
+
+* ``rescaled_jl``  — the paper: biased sampling + rescaled-JL entries +
+      WAltMin. Best one-pass accuracy on correlated data (Fig 2b/4b).
+* ``direct_svd``   — SVD of the sketch product; cheapest, keeps the plain-JL
+      bias the paper removes (Fig 2a).
+* ``lela_waltmin`` — exact entries from a second pass over (A, B)
+      (``exact_pair=(A, B)``): the two-pass accuracy ceiling.
+
+with ``backend`` in {'reference' (eager oracle), 'jit' (scan'd WAltMin),
+'pallas' (gather-kernel entry extraction)} — see README.md.
 """
 import math
 
@@ -56,10 +71,18 @@ result = core.smppca(
     backend="scan",
 )
 
-# the same pass is available standalone — e.g. sketch once, complete later:
+# smppca is exactly the two engines composed — sketch once, estimate later
+# (or many times, with different methods, from the same one-pass summary):
 summary = core.build_summary(key, A, B, 256, backend="scan")
 print(f"summary: sketches {summary.A_sketch.shape} + "
       f"{summary.n1 + summary.n2} norms")
+est = core.estimate_product(
+    jax.random.fold_in(key, 2), summary, r,
+    method="rescaled_jl",                # or "direct_svd" / "lela_waltmin"
+    backend="jit",                       # or "reference" / "pallas"
+    m=int(10 * n * r * math.log(n)), T=8)
+print(f"estimate_product factors: U {est.factors.U.shape}, "
+      f"V {est.factors.V.shape}")
 
 err, opt = core.spectral_error_vs_optimal(A, B, r, result.factors)
 print(f"SMP-PCA spectral error : {float(err):.4f}")

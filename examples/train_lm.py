@@ -13,7 +13,6 @@ import dataclasses
 import json
 import logging
 
-import jax
 
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM

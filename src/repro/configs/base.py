@@ -16,8 +16,7 @@ Block types: "attn" (self-attn + MLP), "attn_moe" (self-attn + MoE),
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 Pattern = Tuple[Tuple[str, ...], int]
 

@@ -2,16 +2,17 @@
 
 Public API:
     build_summary / rows_summary                          (step 1: the engine)
+    estimate_product                                      (steps 2-3: the engine)
     sketch_summary / sketch_pass / streamed_rows_summary  (step 1, legacy wrappers)
     sample_entries / q_probabilities                      (step 2a, Eq 1)
     rescaled_entries / rescaled_matrix                    (step 2b, Eq 2)
-    waltmin                                               (step 3, Alg 2)
+    waltmin / waltmin_reference                           (step 3, Alg 2)
     smppca / smppca_from_summary                          (Alg 1)
     lela / sketch_svd / optimal_rank_r / product_of_pcas  (baselines)
     distributed_sketch_summary / distributed_smppca       (multi-device pass)
 """
 from repro.core.types import (
-    LowRankFactors, SampleSet, SketchSummary, SMPPCAResult)
+    EstimateResult, LowRankFactors, SampleSet, SketchSummary, SMPPCAResult)
 from repro.core.sketch import (
     column_norms, fwht, gaussian_pi, merge_summaries, pi_rows, sketch_pass,
     sketch_summary, srht_sketch, streamed_rows_summary)
@@ -22,10 +23,14 @@ from repro.core.sampling import (
     q_at, q_probabilities, sample_entries, sample_entries_binomial, split_omega)
 from repro.core.estimator import (
     plain_jl_entries, rescaled_entries, rescaled_matrix)
-from repro.core.waltmin import coo_matmat, coo_rmatmat, coo_topr_svd, waltmin
+from repro.core.waltmin import (
+    coo_matmat, coo_rmatmat, coo_topr_svd, waltmin, waltmin_reference)
+from repro.core.estimation_engine import (
+    default_m, estimate_product, estimators, exact_entries, implicit_topr,
+    register_estimator)
 from repro.core.smppca import (
     smppca, smppca_from_summary, spectral_error, spectral_error_vs_optimal)
-from repro.core.lela import lela
+from repro.core.lela import lela, norms_only_summary
 from repro.core.baselines import optimal_rank_r, product_of_pcas, sketch_svd
 from repro.core.distributed import (
     distributed_sketch_summary, distributed_smppca)

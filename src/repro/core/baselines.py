@@ -10,13 +10,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import summary_engine
-from repro.core.types import LowRankFactors, SketchSummary
+from repro.core import estimation_engine, summary_engine
+from repro.core.estimation_engine import implicit_topr as _implicit_topr
+from repro.core.types import LowRankFactors
 
 
 def optimal_rank_r(A: jax.Array, B: jax.Array, r: int) -> LowRankFactors:
@@ -25,38 +25,18 @@ def optimal_rank_r(A: jax.Array, B: jax.Array, r: int) -> LowRankFactors:
     return LowRankFactors(U[:, :r] * s[:r], Vt[:r].T)
 
 
-def _implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
-                   n_iter: int = 12) -> LowRankFactors:
-    """Top-r factors of an (n1, n2) operator given only mat-vec closures."""
-    p = min(n2, r + 8)
-    G = jax.random.normal(key, (n2, p))
-    Y = matvec(G)
-
-    def body(_, Y):
-        Q, _ = jnp.linalg.qr(Y)
-        Z, _ = jnp.linalg.qr(rmatvec(Q))
-        return matvec(Z)
-
-    Y = jax.lax.fori_loop(0, n_iter, body, Y)
-    Q, _ = jnp.linalg.qr(Y)
-    Bt = rmatvec(Q)                          # (n2, p)
-    Ub, s, Vt = jnp.linalg.svd(Bt.T, full_matrices=False)
-    return LowRankFactors(Q @ (Ub[:, :r] * s[:r]), Vt[:r].T)
-
-
-@functools.partial(jax.jit, static_argnames=("r", "k", "method", "backend"))
+@functools.partial(jax.jit, static_argnames=("r", "k", "method", "backend",
+                                             "est_backend"))
 def sketch_svd(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
-               method: str = "gaussian",
-               backend: str = "reference") -> LowRankFactors:
-    """SVD(A~^T B~) via power iteration on the implicit product of sketches."""
+               method: str = "gaussian", backend: str = "reference",
+               est_backend: str = "jit") -> LowRankFactors:
+    """SVD(A~^T B~): the two engines composed with method='direct_svd'."""
     k_sketch, k_pow = jax.random.split(key)
     summary = summary_engine.build_summary(k_sketch, A, B, k, method=method,
                                            backend=backend)
-    As, Bs = summary.A_sketch, summary.B_sketch
-    return _implicit_topr(
-        lambda X: As.T @ (Bs @ X),
-        lambda X: Bs.T @ (As @ X),
-        As.shape[1], Bs.shape[1], r, k_pow)
+    est = estimation_engine.estimate_product(
+        k_pow, summary, r, method="direct_svd", backend=est_backend)
+    return est.factors
 
 
 @functools.partial(jax.jit, static_argnames=("r",))

@@ -14,20 +14,16 @@ equations.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax <= 0.4.x
     from jax.experimental.shard_map import shard_map
 except ImportError:  # newer jax promoted it to the top level
     from jax import shard_map
 
-from repro.core import estimator, sampling
-from repro.core.waltmin import waltmin as _waltmin_fn
 from repro.core.types import LowRankFactors, SketchSummary
 
 

@@ -1,0 +1,314 @@
+"""EstimationEngine — ONE entry point for the paper's Step 2+3.
+
+``estimate_product(key, summary, r, method=..., backend=...)`` turns any
+``build_summary`` output (the Step-1 ``SketchSummary``) into rank-r factors
+of A^T B. It is the step-2 mirror of the SummaryEngine: the three historical
+estimation paths are registered here as *methods*, each runnable on several
+execution *backends*, behind one (method, backend) registry:
+
+methods (what is estimated):
+
+    rescaled_jl   the paper's SMP-PCA step 2: biased Omega sample (Eq 1),
+                  rescaled-JL entry estimates (Eq 2) from the sketches +
+                  retained column norms, WAltMin completion (Alg 2)
+    lela_waltmin  the LELA two-pass baseline [Bhojanapalli et al.]: the same
+                  biased sample, but *exact* entries A_i^T B_j gathered from
+                  the original pair (pass ``exact_pair=(A, B)``), then the
+                  same WAltMin. Comparing it with rescaled_jl isolates the
+                  eta*sigma_r^* sketching cost of Thm 3.1
+    direct_svd    SVD(A~^T B~): top-r SVD of the product of the sketches, no
+                  sampling/completion — the one-pass strawman SMP-PCA beats
+
+backends (how it runs):
+
+    reference     eager Python loops (WAltMin iterations dispatch one op at a
+                  time; direct_svd materializes A~^T B~ and takes a dense
+                  SVD) — the semantic oracle the other backends are tested
+                  against, and the baseline their speedup is measured against
+    jit           everything jitted: WAltMin's T iterations run as one
+                  ``lax.scan`` (core/waltmin.py), direct_svd as implicit
+                  power iteration — one dispatch per estimate
+    pallas        like jit, but rescaled-JL entry extraction runs the
+                  scalar-prefetch gather kernel ``kernels/sampled_dot.py``
+                  (indices in SMEM; each grid step DMAs exactly the (1, k)
+                  sketch rows it needs). Methods without a kernel-specific
+                  stage (lela_waltmin, direct_svd) alias their jit path.
+
+Batched mode: pass a summary whose fields carry a leading stack axis
+(L, ...) — e.g. ``build_summary`` on stacked (L, d, n) inputs — and the
+engine estimates all L products in one vmapped dispatch (one key per pair,
+either ``split(key, L)`` or an explicit key stack), matching the
+SummaryEngine's batched sketch mode. The reference backend loops instead
+(eager python is the point of that backend); results are stacked identically.
+
+Randomness contract: ``key`` is split once into (sample key, ALS key) —
+identical across backends, so for a fixed key every backend sees the same
+Omega and the same ALS initialization, and outputs agree to float
+reassociation. ``smppca`` and ``lela`` are thin compositions of the two
+engines and preserve their historical key derivations exactly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator, sampling
+from repro.core.types import (
+    EstimateResult, LowRankFactors, SampleSet, SketchSummary)
+from repro.core.waltmin import waltmin, waltmin_reference
+
+METHODS = ("rescaled_jl", "lela_waltmin", "direct_svd")
+BACKENDS = ("reference", "jit", "pallas")
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_estimator(method: str, backend: str):
+    """Register ``fn(key, summary, r, *, m, T, use_splits, exact_pair)`` for
+    one (method, backend) cell. Registering an existing cell overrides it —
+    the hook for experiment-specific estimators."""
+    def deco(fn):
+        _REGISTRY[(method, backend)] = fn
+        return fn
+    return deco
+
+
+def estimators() -> tuple:
+    """All registered (method, backend) cells."""
+    return tuple(sorted(_REGISTRY))
+
+
+def default_m(n1: int, n2: int, r: int) -> int:
+    """The paper's m = Theta(n r log n) sample budget with the constant the
+    experiments use (Sec 4: ~10 n r log n)."""
+    n = max(n1, n2)
+    return int(10 * n * r * math.log(max(n, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Shared stages
+# ---------------------------------------------------------------------------
+
+def _sample_omega(key: jax.Array, summary: SketchSummary, m: int) -> SampleSet:
+    return sampling.sample_entries(key, summary.norm_A, summary.norm_B, m)
+
+
+def exact_entries(A: jax.Array, B: jax.Array, rows: jax.Array,
+                  cols: jax.Array, chunk: int = 2048) -> jax.Array:
+    """Exact A_i^T B_j on (rows, cols) — LELA's second pass, chunked so the
+    (d, chunk) gathers stay cache-resident."""
+    m = rows.shape[0]
+    pad = (-m) % chunk
+    rp = jnp.pad(rows, (0, pad))
+    cp = jnp.pad(cols, (0, pad))
+
+    def body(_, rc):
+        r_, c_ = rc
+        return None, jnp.sum(A[:, r_] * B[:, c_], axis=0)
+
+    _, vals = jax.lax.scan(
+        body, None, (rp.reshape(-1, chunk), cp.reshape(-1, chunk)))
+    return vals.reshape(-1)[:m]
+
+
+def implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
+                  n_iter: int = 12) -> LowRankFactors:
+    """Top-r factors of an (n1, n2) operator given only mat-vec closures
+    (randomized subspace iteration; footnote 6's 'never materialize')."""
+    p = min(n2, r + 8)
+    G = jax.random.normal(key, (n2, p))
+    Y = matvec(G)
+
+    def body(_, Y):
+        Q, _ = jnp.linalg.qr(Y)
+        Z, _ = jnp.linalg.qr(rmatvec(Q))
+        return matvec(Z)
+
+    Y = jax.lax.fori_loop(0, n_iter, body, Y)
+    Q, _ = jnp.linalg.qr(Y)
+    Bt = rmatvec(Q)                          # (n2, p)
+    Ub, s, Vt = jnp.linalg.svd(Bt.T, full_matrices=False)
+    return LowRankFactors(Q @ (Ub[:, :r] * s[:r]), Vt[:r].T)
+
+
+# ---------------------------------------------------------------------------
+# rescaled_jl — sample, estimate from the summary, complete
+# ---------------------------------------------------------------------------
+
+def _rescaled_jl(key, summary, r, *, m, T, use_splits, exact_pair,
+                 values_fn, waltmin_fn) -> EstimateResult:
+    del exact_pair
+    k_sample, k_als = jax.random.split(key)
+    samples = _sample_omega(k_sample, summary, m)
+    values = values_fn(summary, samples.rows, samples.cols)
+    factors = waltmin_fn(k_als, samples, values, summary.n1, summary.n2, r, T,
+                         norm_A=summary.norm_A, use_splits=use_splits)
+    return EstimateResult(factors, samples, values)
+
+
+@register_estimator("rescaled_jl", "reference")
+def _rescaled_jl_reference(key, summary, r, **kw) -> EstimateResult:
+    return _rescaled_jl(key, summary, r,
+                        values_fn=estimator.rescaled_entries,
+                        waltmin_fn=waltmin_reference, **kw)
+
+
+@register_estimator("rescaled_jl", "jit")
+@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+def _rescaled_jl_jit(key, summary, r, **kw) -> EstimateResult:
+    return _rescaled_jl(key, summary, r,
+                        values_fn=estimator.rescaled_entries,
+                        waltmin_fn=waltmin, **kw)
+
+
+def _pallas_values(summary: SketchSummary, rows: jax.Array,
+                   cols: jax.Array) -> jax.Array:
+    """Rescaled-JL entries via the scalar-prefetch gather kernel. The kernel
+    wants row-major (n, k) sketches — k is small, so the one-time transpose
+    is cheap next to the O(m k) gather it unlocks."""
+    from repro.kernels import ops as kops
+    return kops.sampled_rescaled_dot(
+        summary.A_sketch.T, summary.B_sketch.T,
+        summary.norm_A, summary.norm_B, rows, cols)
+
+
+@register_estimator("rescaled_jl", "pallas")
+def _rescaled_jl_pallas(key, summary, r, **kw) -> EstimateResult:
+    return _rescaled_jl(key, summary, r, values_fn=_pallas_values,
+                        waltmin_fn=waltmin, **kw)
+
+
+# ---------------------------------------------------------------------------
+# lela_waltmin — sample, gather exact entries, complete (two-pass baseline)
+# ---------------------------------------------------------------------------
+
+def _lela_waltmin(key, summary, r, *, m, T, use_splits, exact_pair,
+                  waltmin_fn) -> EstimateResult:
+    if exact_pair is None:
+        raise ValueError(
+            "method='lela_waltmin' is the two-pass baseline: it needs the "
+            "original matrices for its exact second pass — pass "
+            "exact_pair=(A, B)")
+    A, B = exact_pair
+    k_sample, k_als = jax.random.split(key)
+    samples = _sample_omega(k_sample, summary, m)
+    values = exact_entries(A, B, samples.rows, samples.cols)
+    factors = waltmin_fn(k_als, samples, values, summary.n1, summary.n2, r, T,
+                         norm_A=summary.norm_A, use_splits=use_splits)
+    return EstimateResult(factors, samples, values)
+
+
+@register_estimator("lela_waltmin", "reference")
+def _lela_reference(key, summary, r, **kw) -> EstimateResult:
+    return _lela_waltmin(key, summary, r, waltmin_fn=waltmin_reference, **kw)
+
+
+@register_estimator("lela_waltmin", "jit")
+@register_estimator("lela_waltmin", "pallas")   # no kernel stage: alias jit
+@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+def _lela_jit(key, summary, r, **kw) -> EstimateResult:
+    return _lela_waltmin(key, summary, r, waltmin_fn=waltmin, **kw)
+
+
+# ---------------------------------------------------------------------------
+# direct_svd — top-r SVD of the product of the sketches, no completion
+# ---------------------------------------------------------------------------
+
+@register_estimator("direct_svd", "reference")
+def _direct_svd_reference(key, summary, r, *, m, T, use_splits,
+                          exact_pair) -> EstimateResult:
+    del key, m, T, use_splits, exact_pair
+    M = summary.A_sketch.T @ summary.B_sketch
+    U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
+    return EstimateResult(
+        LowRankFactors(U[:, :r] * s[:r], Vt[:r].T), None, None)
+
+
+@register_estimator("direct_svd", "jit")
+@register_estimator("direct_svd", "pallas")     # no kernel stage: alias jit
+@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+def _direct_svd_jit(key, summary, r, *, m, T, use_splits,
+                    exact_pair) -> EstimateResult:
+    del m, T, use_splits, exact_pair
+    As, Bs = summary.A_sketch, summary.B_sketch
+    factors = implicit_topr(
+        lambda X: As.T @ (Bs @ X),
+        lambda X: Bs.T @ (As @ X),
+        summary.n1, summary.n2, r, key)
+    return EstimateResult(factors, None, None)
+
+
+# ---------------------------------------------------------------------------
+# The entry point
+# ---------------------------------------------------------------------------
+
+def _is_key_stack(key, L: int) -> bool:
+    ndim = jnp.ndim(key)
+    if ndim == 2:
+        return key.shape[0] == L
+    if ndim == 1 and jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key.shape[0] == L
+    return False
+
+
+def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
+                     method: str = "rescaled_jl", backend: str = "jit",
+                     m: Optional[int] = None, T: int = 10,
+                     use_splits: bool = False,
+                     exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None
+                     ) -> EstimateResult:
+    """Rank-r factors of A^T B from a one-pass summary (Alg 1 steps 2-3).
+
+    summary: any ``build_summary`` output — (k, n) sketches + exact column
+             norms, or a stacked (L, k, n)/(L, n) summary for the batched
+             mode, which vmaps the chosen (method, backend) over the L
+             summaries in one dispatch (``key`` is split per pair, or pass a
+             stack of L keys).
+    method:  'rescaled_jl' (the paper) | 'lela_waltmin' (two-pass baseline;
+             needs ``exact_pair=(A, B)``) | 'direct_svd' (SVD of the sketch
+             product, no completion).
+    backend: 'reference' (eager oracle) | 'jit' (lax.scan WAltMin / implicit
+             power iteration) | 'pallas' (jit + the sampled-dot gather
+             kernel for rescaled-JL extraction).
+    m:       Omega sample budget; defaults to the paper's ~10 n r log n.
+             Ignored by direct_svd.
+    T:       WAltMin iteration pairs. use_splits: Alg-2 sample splitting.
+    """
+    if method not in METHODS:
+        raise ValueError(
+            f"unknown estimation method {method!r} (use one of {METHODS})")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown estimation backend {backend!r} (use one of {BACKENDS})")
+    fn = _REGISTRY[(method, backend)]
+    batched = summary.A_sketch.ndim == 3
+    if m is None:
+        m = default_m(int(summary.A_sketch.shape[-1]),
+                      int(summary.B_sketch.shape[-1]), r)
+    kw = dict(m=m, T=T, use_splits=use_splits, exact_pair=exact_pair)
+
+    if not batched:
+        return fn(key, summary, r, **kw)
+
+    L = summary.A_sketch.shape[0]
+    keys = key if _is_key_stack(key, L) else jax.random.split(key, L)
+    if backend == "reference":
+        # eager python is the point of this backend — loop, then stack
+        outs = []
+        for i in range(L):
+            kw_i = dict(kw, exact_pair=None if exact_pair is None else
+                        (exact_pair[0][i], exact_pair[1][i]))
+            outs.append(fn(keys[i], jax.tree.map(lambda x: x[i], summary),
+                           r, **kw_i))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    if exact_pair is not None:
+        A, B = exact_pair
+        return jax.vmap(
+            lambda kk, s, a, b: fn(kk, s, r, m=m, T=T, use_splits=use_splits,
+                                   exact_pair=(a, b))
+        )(keys, summary, A, B)
+    return jax.vmap(lambda kk, s: fn(kk, s, r, **kw))(keys, summary)

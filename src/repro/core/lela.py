@@ -4,6 +4,10 @@ Pass 1: column norms of A and B. Pass 2: *exact* entries A_i^T B_j on the
 sampled Omega. Then the same WAltMin completion. SMP-PCA replaces pass 2 with
 the rescaled-JL estimate; comparing the two isolates the cost of sketching
 (the eta*sigma_r^* term in Thm 3.1).
+
+A thin composition over the EstimationEngine: pass 1 builds a sketch-free
+summary (norms only), and ``estimate_product(method='lela_waltmin',
+exact_pair=(A, B))`` runs the sampled second pass + completion.
 """
 from __future__ import annotations
 
@@ -12,31 +16,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import sampling
-from repro.core.waltmin import waltmin as _waltmin_fn
-from repro.core.types import LowRankFactors, SampleSet
+from repro.core import estimation_engine
+from repro.core.types import LowRankFactors, SketchSummary
+
+
+def norms_only_summary(A: jax.Array, B: jax.Array) -> SketchSummary:
+    """Pass 1: a ``SketchSummary`` with exact column norms and empty (0, n)
+    sketches — all a norm-driven estimator (lela_waltmin) consumes."""
+    norm_A = jnp.sqrt(jnp.sum(A.astype(jnp.float32) ** 2, axis=0))
+    norm_B = jnp.sqrt(jnp.sum(B.astype(jnp.float32) ** 2, axis=0))
+    return SketchSummary(jnp.zeros((0, A.shape[1]), jnp.float32),
+                         jnp.zeros((0, B.shape[1]), jnp.float32),
+                         norm_A, norm_B)
 
 
 @functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
 def lela(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, m: int,
          T: int = 10, use_splits: bool = False) -> LowRankFactors:
-    k_sample, k_als = jax.random.split(key)
-    # ---- pass 1: norms ------------------------------------------------------
-    norm_A = jnp.sqrt(jnp.sum(A.astype(jnp.float32) ** 2, axis=0))
-    norm_B = jnp.sqrt(jnp.sum(B.astype(jnp.float32) ** 2, axis=0))
-    samples = sampling.sample_entries(k_sample, norm_A, norm_B, m)
-    # ---- pass 2: exact sampled entries (the pass SMP-PCA eliminates) --------
-    # chunked so the (d, chunk) gathers stay cache-resident (a fair baseline:
-    # the Spark LELA streams these too)
-    chunk = 2048
-    pad = (-m) % chunk
-    rows = jnp.pad(samples.rows, (0, pad))
-    cols = jnp.pad(samples.cols, (0, pad))
-    def body(_, rc):
-        r_, c_ = rc
-        return None, jnp.sum(A[:, r_] * B[:, c_], axis=0)
-    _, vals = jax.lax.scan(
-        body, None, (rows.reshape(-1, chunk), cols.reshape(-1, chunk)))
-    values = vals.reshape(-1)[:m]
-    return _waltmin_fn(k_als, samples, values, A.shape[1], B.shape[1],
-                           r, T, norm_A=norm_A, use_splits=use_splits)
+    summary = norms_only_summary(A, B)
+    est = estimation_engine.estimate_product(
+        key, summary, r, method="lela_waltmin", backend="jit", m=m, T=T,
+        use_splits=use_splits, exact_pair=(A, B))
+    return est.factors

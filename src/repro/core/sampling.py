@@ -16,7 +16,6 @@ Two implementations:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,58 +1,57 @@
 """Algorithm 1: SMP-PCA — Streaming Matrix Product PCA, end to end.
 
-    summary  = one pass over (A, B)            -> sketches + column norms
-    Omega    = biased sample (Eq 1)            -> m entries
-    values   = rescaled-JL estimates (Eq 2) on Omega
-    factors  = WAltMin completion (Alg 2)      -> U (n1, r), V (n2, r)
+A thin composition of the two engines:
+
+    summary = summary_engine.build_summary(...)      (step 1: one pass)
+    result  = estimation_engine.estimate_product(    (steps 2-3)
+                  ..., method='rescaled_jl', ...)
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimator, sampling, summary_engine
-from repro.core.waltmin import waltmin as _waltmin_fn
-from repro.core.types import LowRankFactors, SampleSet, SketchSummary, SMPPCAResult
+from repro.core import estimation_engine, summary_engine
+from repro.core.types import LowRankFactors, SketchSummary, SMPPCAResult
 
 
 @functools.partial(jax.jit, static_argnames=("r", "k", "m", "T", "method",
                                               "backend", "block", "precision",
-                                              "use_splits"))
+                                              "est_backend", "use_splits"))
 def smppca(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
            m: int, T: int = 10, method: str = "gaussian",
            backend: str = "reference", block: int = 1024,
-           precision: str | None = None,
+           precision: str | None = None, est_backend: str = "jit",
            use_splits: bool = False) -> SMPPCAResult:
     """Single-pass rank-r PCA of A^T B. A: (d, n1), B: (d, n2).
 
-    The step-1 pass goes through the SummaryEngine: ``method``/``backend``/
-    ``block``/``precision`` select the sketch and its execution strategy
-    (see ``core.summary_engine.build_summary``)."""
+    The step-1 pass goes through the SummaryEngine (``method``/``backend``/
+    ``block``/``precision`` select the sketch and its execution strategy);
+    steps 2-3 go through the EstimationEngine (``est_backend`` selects the
+    completion execution strategy; the method is the paper's rescaled_jl)."""
     k_sketch, k_sample, k_als = jax.random.split(key, 3)
+    del k_als  # historical key layout: estimation splits k_sample itself
     summary = summary_engine.build_summary(
         k_sketch, A, B, k, method=method, backend=backend, block=block,
         precision=precision)
     return smppca_from_summary(
         jax.random.fold_in(k_sample, 0), summary, r=r, m=m, T=T,
-        use_splits=use_splits)
+        est_backend=est_backend, use_splits=use_splits)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+@functools.partial(jax.jit, static_argnames=("r", "m", "T", "est_backend",
+                                             "use_splits"))
 def smppca_from_summary(key: jax.Array, summary: SketchSummary, *, r: int,
-                        m: int, T: int = 10,
+                        m: int, T: int = 10, est_backend: str = "jit",
                         use_splits: bool = False) -> SMPPCAResult:
     """Steps 2-3 given a one-pass summary (entry point for streaming and for
     the distributed pass, whose psum produces exactly this summary)."""
-    k_sample, k_als = jax.random.split(key)
-    samples = sampling.sample_entries(k_sample, summary.norm_A, summary.norm_B, m)
-    values = estimator.rescaled_entries(summary, samples.rows, samples.cols)
-    factors = _waltmin_fn(k_als, samples, values,
-                              summary.n1, summary.n2, r, T,
-                              norm_A=summary.norm_A, use_splits=use_splits)
-    return SMPPCAResult(factors, summary, samples, values)
+    est = estimation_engine.estimate_product(
+        key, summary, r, method="rescaled_jl", backend=est_backend, m=m, T=T,
+        use_splits=use_splits)
+    return SMPPCAResult(est.factors, summary, est.samples, est.values)
 
 
 # ---------------------------------------------------------------------------

@@ -76,6 +76,20 @@ class LowRankFactors(NamedTuple):
         return self.U @ self.V.T
 
 
+class EstimateResult(NamedTuple):
+    """Step-2/3 output of the EstimationEngine (``estimate_product``).
+
+    ``samples``/``values`` carry the Omega sample and the estimated entries
+    for the completion methods; both are None for ``method='direct_svd'``
+    (which never samples). None fields are empty pytree nodes, so the result
+    stays jit/vmap friendly across methods.
+    """
+
+    factors: LowRankFactors
+    samples: Optional[SampleSet]
+    values: Optional[jax.Array]   # (m,) estimated entries on Omega
+
+
 class SMPPCAResult(NamedTuple):
     factors: LowRankFactors
     summary: SketchSummary

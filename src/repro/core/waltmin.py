@@ -105,18 +105,17 @@ def _ls_step(rows_from: jax.Array, cols_to: jax.Array, vals: jax.Array,
     return jnp.linalg.solve(G, b[..., None])[..., 0]    # (n_to, r)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n1", "n2", "r", "T", "use_splits"))
-def waltmin(key: jax.Array, samples: SampleSet, values: jax.Array,
-            n1: int, n2: int, r: int, T: int,
-            norm_A: jax.Array | None = None,
-            use_splits: bool = True) -> LowRankFactors:
-    """Algorithm 2. ``values`` are M~ on Omega (or exact entries for LELA).
-
-    norm_A: column norms used by the trim step (falls back to uniform).
-    use_splits=False reuses all samples every iteration (practical mode, what
-    the paper's Spark code does; splits are for the analysis).
-    """
+def _waltmin_impl(key: jax.Array, samples: SampleSet, values: jax.Array,
+                  n1: int, n2: int, r: int, T: int,
+                  norm_A: jax.Array | None, use_splits: bool,
+                  scan: bool) -> LowRankFactors:
+    """One body for both execution modes: ``scan=True`` runs the T iteration
+    pairs as one ``lax.scan`` (the jitted path), ``scan=False`` as a Python
+    loop of eager dispatches (the EstimationEngine's reference oracle). The
+    iteration driver is the ONLY thing that differs — weights, masks, keys,
+    init, and the final solve are shared, which is what keeps the
+    cross-backend parity contract a property of the code rather than of
+    hand-synchronized copies."""
     w_all = jnp.where(samples.mask, 1.0 / jnp.maximum(samples.q_hat, 1e-12), 0.0)
     vals = jnp.where(samples.mask, values, 0.0)
     if norm_A is None:
@@ -145,16 +144,51 @@ def waltmin(key: jax.Array, samples: SampleSet, values: jax.Array,
     # space* of the other; orthonormalizing the carried factor between steps
     # removes the scale drift that makes raw ALS diverge in f32 (only the
     # span matters — the final V solve restores a consistent scaled pair).
-    def scan_body(U, t):
+    def half_pair(U, t):
         V = _ls_step(samples.rows, samples.cols, vals, wmask(2 * t + 1), U, n2)
         Vq, _ = jnp.linalg.qr(V)
         Unew = _ls_step(samples.cols, samples.rows, vals, wmask(2 * t + 2),
                         Vq, n1)
         Uq, _ = jnp.linalg.qr(Unew)
-        return Uq, None
+        return Uq
 
-    U_final, _ = jax.lax.scan(scan_body, U, jnp.arange(T))
+    if scan:
+        U_final, _ = jax.lax.scan(lambda U, t: (half_pair(U, t), None),
+                                  U, jnp.arange(T))
+    else:
+        U_final = U
+        for t in range(T):
+            U_final = half_pair(U_final, t)
     # final V solve against the last (orthonormal) U: consistent scaled pair
     V_final = _ls_step(samples.rows, samples.cols, vals, wmask(2 * T - 1),
                        U_final, n2)
     return LowRankFactors(U_final, V_final)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n1", "n2", "r", "T", "use_splits"))
+def waltmin(key: jax.Array, samples: SampleSet, values: jax.Array,
+            n1: int, n2: int, r: int, T: int,
+            norm_A: jax.Array | None = None,
+            use_splits: bool = True) -> LowRankFactors:
+    """Algorithm 2. ``values`` are M~ on Omega (or exact entries for LELA).
+
+    norm_A: column norms used by the trim step (falls back to uniform).
+    use_splits=False reuses all samples every iteration (practical mode, what
+    the paper's Spark code does; splits are for the analysis).
+    """
+    return _waltmin_impl(key, samples, values, n1, n2, r, T, norm_A,
+                         use_splits, scan=True)
+
+
+def waltmin_reference(key: jax.Array, samples: SampleSet, values: jax.Array,
+                      n1: int, n2: int, r: int, T: int,
+                      norm_A: jax.Array | None = None,
+                      use_splits: bool = True) -> LowRankFactors:
+    """Algorithm 2 as written on the page: T Python-level iteration pairs,
+    every half-step dispatched eagerly (no jit, no scan) — the
+    EstimationEngine's ``backend='reference'`` oracle, and the baseline the
+    jitted scan loop's speedup is measured against (benchmarks/run.py
+    ``--suite estimation``)."""
+    return _waltmin_impl(key, samples, values, n1, n2, r, T, norm_A,
+                         use_splits, scan=False)

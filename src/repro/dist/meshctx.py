@@ -6,7 +6,6 @@ None — a no-op — when nothing is registered, e.g. in single-device tests).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 _MESH = None
 

@@ -9,7 +9,6 @@ import argparse
 import json
 import logging
 
-import jax
 
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM

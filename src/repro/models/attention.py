@@ -9,9 +9,8 @@ equivalent of flash attention; XLA fuses each chunk's matmul+softmax update).
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

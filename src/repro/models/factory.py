@@ -3,7 +3,7 @@ closures — the single entry point used by train, serve, and the dry-run."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

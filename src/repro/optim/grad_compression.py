@@ -30,15 +30,13 @@ optimizer level).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.smppca import smppca_from_summary
 from repro.core.summary_engine import identity_product_summary
-from repro.core.types import SketchSummary
 
 
 class CompressionConfig(NamedTuple):

@@ -2,21 +2,27 @@
 
 ``Engine``       — LM serving: preallocated KV caches, prefill + jitted
                    decode loop, greedy or temperature sampling.
-``SketchService`` — summary serving: shape-bucketed micro-batching front-end
-                   for one-pass (A, B) summary requests, dispatched through
-                   the SummaryEngine's batched (vmapped) mode.
+``SketchService`` — sketch serving: shape-bucketed micro-batching front-end
+                   for one-pass (A, B) requests. ``flush()`` returns each
+                   request's summary; ``flush_factors(r)`` runs the full
+                   two-engine pipeline (SummaryEngine sketch, then
+                   EstimationEngine completion) and returns each request's
+                   top-r factors of A^T B — each shape bucket is ONE batched
+                   ``build_summary`` dispatch chained into ONE batched
+                   ``estimate_product`` dispatch.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.estimation_engine import estimate_product
 from repro.core.summary_engine import build_summary
-from repro.core.types import SketchSummary
+from repro.core.types import LowRankFactors, SketchSummary
 from repro.models.factory import Model
 
 
@@ -76,7 +82,9 @@ class SketchService:
     >>> svc = SketchService(k=128, backend="scan")
     >>> t0 = svc.submit(key0, A0, B0)
     >>> t1 = svc.submit(key1, A1, B1)
-    >>> out = svc.flush()          # {ticket: SketchSummary}
+    >>> out = svc.flush()              # {ticket: SketchSummary}
+    >>> # or the full pipeline: sketch -> estimate, top-r factors per request
+    >>> fac = svc.flush_factors(r=5)   # {ticket: ServedEstimate}
     """
 
     def __init__(self, k: int = 128, *, method: str = "gaussian",
@@ -103,10 +111,10 @@ class SketchService:
     def pending(self) -> int:
         return len(self._queue)
 
-    def flush(self) -> Dict[int, SketchSummary]:
-        """One batched engine dispatch per bucket; drains the queue. Buckets
-        key on shapes AND dtypes (of A, B, and the key) so stacking never
-        promotes a request's arrays — results stay identical to solo
+    def _drain_buckets(self):
+        """Group queued requests by shape+dtype signature and clear the queue.
+        Buckets key on shapes AND dtypes (of A, B, and the key) so stacking
+        never promotes a request's arrays — results stay identical to solo
         dispatches."""
         buckets = collections.defaultdict(list)
         for ticket, key, A, B in self._queue:
@@ -114,15 +122,61 @@ class SketchService:
                    key.shape, str(key.dtype))
             buckets[sig].append((ticket, key, A, B))
         self._queue = []
+        return buckets
+
+    def _stack_and_sketch(self, requests):
+        """Stack one bucket's requests and run the batched step-1 dispatch.
+        Returns (tickets, keys, A, B, batched summaries)."""
+        tickets = [req[0] for req in requests]
+        keys = jnp.stack([req[1] for req in requests])
+        A = jnp.stack([req[2] for req in requests])
+        B = jnp.stack([req[3] for req in requests])
+        summaries = build_summary(
+            keys, A, B, self.k, method=self.method, backend=self.backend,
+            block=self.block, precision=self.precision)
+        return tickets, keys, A, B, summaries
+
+    def flush(self) -> Dict[int, SketchSummary]:
+        """One batched SummaryEngine dispatch per bucket; drains the queue."""
         out: Dict[int, SketchSummary] = {}
-        for requests in buckets.values():
-            tickets = [r[0] for r in requests]
-            keys = jnp.stack([r[1] for r in requests])
-            A = jnp.stack([r[2] for r in requests])
-            B = jnp.stack([r[3] for r in requests])
-            batched = build_summary(
-                keys, A, B, self.k, method=self.method, backend=self.backend,
-                block=self.block, precision=self.precision)
+        for requests in self._drain_buckets().values():
+            tickets, _, _, _, batched = self._stack_and_sketch(requests)
             for i, ticket in enumerate(tickets):
                 out[ticket] = jax.tree.map(lambda x: x[i], batched)
         return out
+
+    def flush_factors(self, r: int, *, m: Optional[int] = None, T: int = 6,
+                      est_method: str = "rescaled_jl",
+                      est_backend: str = "jit",
+                      use_splits: bool = False) -> Dict[int, "ServedEstimate"]:
+        """The sketch->estimate pipeline: per shape bucket, one batched
+        ``build_summary`` dispatch feeds one batched ``estimate_product``
+        dispatch, and each request gets the top-r factors of its A^T B
+        (plus the summary, for callers that also want the side information).
+
+        Each request's estimation key is ``fold_in(request key, 1)`` — a
+        fixed derivation from the key the caller submitted, so results are
+        reproducible per request and independent of bucket composition.
+        ``est_method='lela_waltmin'`` stacks the queued (A, B) pairs as the
+        exact second pass (the service holds them anyway while queueing).
+        """
+        out: Dict[int, ServedEstimate] = {}
+        for requests in self._drain_buckets().values():
+            tickets, keys, A, B, summaries = self._stack_and_sketch(requests)
+            est_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys)
+            exact = (A, B) if est_method == "lela_waltmin" else None
+            ests = estimate_product(
+                est_keys, summaries, r, method=est_method,
+                backend=est_backend, m=m, T=T, use_splits=use_splits,
+                exact_pair=exact)
+            for i, ticket in enumerate(tickets):
+                out[ticket] = ServedEstimate(
+                    jax.tree.map(lambda x: x[i], summaries),
+                    jax.tree.map(lambda x: x[i], ests.factors))
+        return out
+
+
+class ServedEstimate(NamedTuple):
+    """One serviced request: the step-1 summary and the step-2/3 factors."""
+    summary: SketchSummary
+    factors: LowRankFactors

@@ -28,7 +28,7 @@ backward matmul would have read — the paper's one-pass principle).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

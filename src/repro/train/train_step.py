@@ -7,7 +7,6 @@ the paper applied to gradient accumulation (the full dW never exists)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax

@@ -1,0 +1,247 @@
+"""EstimationEngine tests: method x backend parity matrix, batched (vmapped)
+mode, the two-engine end-to-end pipeline per sketch backend, and the serving
+front-end's sketch->estimate path.
+
+The engine's contract: ``key`` is split identically across backends (sample
+key, ALS key), so for a fixed key every backend sees the same Omega and the
+same initialization — outputs agree to float reassociation (the reference
+backend runs the same ops eagerly; pallas swaps only the rescaled-JL value
+extraction for the gather kernel).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import estimation_engine as ee
+from tests.conftest import planted_pair
+
+
+def _summary(key, d=512, n=40, k=64, corr=0.3):
+    A, B = planted_pair(key, d, n, corr=corr)
+    return A, B, core.build_summary(key, A, B, k)
+
+
+def _dense(factors):
+    return np.asarray(factors.U @ factors.V.T)
+
+
+# ---------------------------------------------------------------------------
+# Parity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["rescaled_jl", "lela_waltmin",
+                                    "direct_svd"])
+@pytest.mark.parametrize("backend", ["jit", "pallas"])
+def test_backend_parity_vs_reference(key, method, backend):
+    """Every (method, backend) cell agrees with its reference cell."""
+    A, B, s = _summary(key)
+    kw = dict(m=1500, T=3,
+              exact_pair=(A, B) if method == "lela_waltmin" else None)
+    ref = core.estimate_product(key, s, 3, method=method,
+                                backend="reference", **kw)
+    got = core.estimate_product(key, s, 3, method=method, backend=backend,
+                                **kw)
+    scale = max(np.abs(_dense(ref.factors)).max(), 1.0)
+    # direct_svd reference is a dense SVD vs the jit path's subspace
+    # iteration: same subspace, slightly looser numerical agreement
+    tol = 5e-3 if method == "direct_svd" else 1e-3
+    np.testing.assert_allclose(_dense(got.factors), _dense(ref.factors),
+                               atol=tol * scale, rtol=0)
+    if method != "direct_svd":
+        # same key -> bit-identical Omega on every backend
+        np.testing.assert_array_equal(np.asarray(got.samples.rows),
+                                      np.asarray(ref.samples.rows))
+        np.testing.assert_allclose(np.asarray(got.values),
+                                   np.asarray(ref.values), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_pallas_values_match_reference_extraction(key):
+    """The sampled_dot gather kernel == the pure-XLA rescaled-JL extraction
+    (the one stage the pallas backend swaps)."""
+    _, _, s = _summary(key)
+    rows = jax.random.randint(key, (300,), 0, s.n1)
+    cols = jax.random.randint(jax.random.fold_in(key, 1), (300,), 0, s.n2)
+    want = core.rescaled_entries(s, rows, cols)
+    got = ee._pallas_values(s, rows, cols)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_unknown_method_backend_and_missing_exact_pair_raise(key):
+    _, _, s = _summary(key, d=128, n=8, k=8)
+    with pytest.raises(ValueError, match="method"):
+        core.estimate_product(key, s, 2, method="nope")
+    with pytest.raises(ValueError, match="backend"):
+        core.estimate_product(key, s, 2, backend="nope")
+    with pytest.raises(ValueError, match="exact_pair"):
+        core.estimate_product(key, s, 2, method="lela_waltmin", m=64)
+    cells = set(ee.estimators())
+    assert {(m, b) for m in ee.METHODS for b in ee.BACKENDS} <= cells
+
+
+def test_default_m_is_paper_budget():
+    assert ee.default_m(100, 80, 5) == int(10 * 100 * 5 * np.log(100))
+
+
+# ---------------------------------------------------------------------------
+# Batched (vmapped) mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "jit", "pallas"])
+def test_batched_matches_looped(key, backend):
+    """One dispatch over a stacked (L, ...) summary == L single dispatches."""
+    L = 3
+    A = jax.random.normal(key, (L, 256, 20))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (L, 256, 20))
+    s = core.build_summary(key, A, B, 32)
+    batched = core.estimate_product(key, s, 2, backend=backend, m=800, T=2)
+    assert batched.factors.U.shape == (L, 20, 2)
+    keys = jax.random.split(key, L)
+    for i in range(L):
+        solo = core.estimate_product(
+            keys[i], jax.tree.map(lambda x: x[i], s), 2, backend=backend,
+            m=800, T=2)
+        np.testing.assert_allclose(
+            _dense(jax.tree.map(lambda x: x[i], batched.factors)),
+            _dense(solo.factors), rtol=1e-4, atol=1e-5)
+
+
+def test_batched_direct_svd_and_key_stack(key):
+    """direct_svd batches too (samples/values stay None), and an explicit
+    key stack is used verbatim."""
+    L = 2
+    A = jax.random.normal(key, (L, 128, 12))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (L, 128, 12))
+    s = core.build_summary(key, A, B, 16)
+    keys = jax.random.split(jax.random.fold_in(key, 7), L)
+    batched = core.estimate_product(keys, s, 2, method="direct_svd")
+    assert batched.samples is None and batched.values is None
+    solo = core.estimate_product(
+        keys[1], jax.tree.map(lambda x: x[1], s), 2, method="direct_svd")
+    np.testing.assert_allclose(
+        _dense(jax.tree.map(lambda x: x[1], batched.factors)),
+        _dense(solo.factors), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["reference", "jit"])
+def test_batched_lela_stacks_exact_pair(key, backend):
+    """Batched lela_waltmin slices the stacked exact pair per item on every
+    backend (the reference loop must slice by hand; the jit path vmaps)."""
+    L = 2
+    A = jax.random.normal(key, (L, 128, 10))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (L, 128, 10))
+    s = core.build_summary(key, A, B, 16)
+    batched = core.estimate_product(key, s, 2, method="lela_waltmin",
+                                    backend=backend, m=400, T=2,
+                                    exact_pair=(A, B))
+    keys = jax.random.split(key, L)
+    for i in range(L):
+        solo = core.estimate_product(
+            keys[i], jax.tree.map(lambda x: x[i], s), 2,
+            method="lela_waltmin", backend=backend, m=400, T=2,
+            exact_pair=(A[i], B[i]))
+        np.testing.assert_allclose(np.asarray(batched.values[i]),
+                                   np.asarray(solo.values), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(
+            _dense(jax.tree.map(lambda x: x[i], batched.factors)),
+            _dense(solo.factors), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Two-engine end-to-end (summary engine -> estimation engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sketch_backend", ["reference", "scan", "rows",
+                                            "pallas"])
+def test_end_to_end_per_sketch_backend(key, sketch_backend):
+    """Any build_summary output flows straight into estimate_product, and the
+    result quality is sketch-backend independent (the engines' joint
+    contract)."""
+    d, n, r = 1024, 50, 3
+    A, B = planted_pair(key, d, n, corr=0.4)
+    s = core.build_summary(key, A, B, 128, backend=sketch_backend, block=256)
+    est = core.estimate_product(key, s, r, m=6000, T=4)
+    err = float(core.spectral_error(A, B, est.factors))
+    assert err < 0.8, (sketch_backend, err)
+
+
+def test_smppca_is_the_two_engine_composition(key):
+    """smppca == build_summary + estimate_product with its key derivation."""
+    d, n, r, k, m = 512, 40, 3, 64, 1500
+    A, B = planted_pair(key, d, n, corr=0.3)
+    res = core.smppca(key, A, B, r=r, k=k, m=m, T=3)
+    k_sketch, k_sample, _ = jax.random.split(key, 3)
+    s = core.build_summary(k_sketch, A, B, k)
+    est = core.estimate_product(jax.random.fold_in(k_sample, 0), s, r,
+                                m=m, T=3)
+    np.testing.assert_allclose(_dense(res.factors), _dense(est.factors),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lela_is_the_norms_only_composition(key):
+    """lela == norms_only_summary + estimate_product(lela_waltmin)."""
+    d, n, r, m = 512, 40, 3, 1500
+    A, B = planted_pair(key, d, n)
+    f = core.lela(key, A, B, r=r, m=m, T=3)
+    s = core.norms_only_summary(A, B)
+    est = core.estimate_product(key, s, r, method="lela_waltmin", m=m, T=3,
+                                exact_pair=(A, B))
+    np.testing.assert_allclose(_dense(f), _dense(est.factors), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_sketch_svd_uses_direct_svd_method(key):
+    d, n, r, k = 512, 40, 3, 64
+    A, B = planted_pair(key, d, n, corr=0.3)
+    f = core.sketch_svd(key, A, B, r=r, k=k)
+    k_sketch, k_pow = jax.random.split(key)
+    s = core.build_summary(k_sketch, A, B, k)
+    est = core.estimate_product(k_pow, s, r, method="direct_svd")
+    np.testing.assert_allclose(_dense(f), _dense(est.factors), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_rescaled_jl_beats_direct_svd_on_narrow_cone(key):
+    """The paper's headline claim holds through the engine API."""
+    d, n, r = 2000, 150, 5
+    A, B = planted_pair(key, d, n, corr=0.2)
+    s = core.build_summary(key, A, B, 128)
+    est_jl = core.estimate_product(key, s, r, method="rescaled_jl",
+                                   m=int(10 * n * r * np.log(n)), T=8)
+    est_svd = core.estimate_product(key, s, r, method="direct_svd")
+    e_jl = float(core.spectral_error(A, B, est_jl.factors))
+    e_svd = float(core.spectral_error(A, B, est_svd.factors))
+    assert e_jl < e_svd, (e_jl, e_svd)
+
+
+# ---------------------------------------------------------------------------
+# Serving pipeline
+# ---------------------------------------------------------------------------
+
+def test_sketch_service_flush_factors_matches_solo_pipeline(key):
+    """flush_factors == solo build_summary + estimate_product per request,
+    with the documented fold_in(key, 1) estimation-key derivation, across
+    mixed shape buckets."""
+    from repro.serve.engine import SketchService
+    svc = SketchService(k=32, backend="scan", block=64)
+    reqs = []
+    for i, (d, n) in enumerate([(128, 10), (256, 8), (128, 10)]):
+        kk = jax.random.fold_in(key, i)
+        A = jax.random.normal(kk, (d, n))
+        B = A + 0.3 * jax.random.normal(jax.random.fold_in(kk, 99), (d, n))
+        reqs.append((svc.submit(kk, A, B), kk, A, B))
+    out = svc.flush_factors(r=2, m=600, T=2)
+    assert svc.pending == 0
+    for ticket, kk, A, B in reqs:
+        s = core.build_summary(kk, A, B, 32, backend="scan", block=64)
+        est = core.estimate_product(jax.random.fold_in(kk, 1), s, 2,
+                                    m=600, T=2)
+        np.testing.assert_allclose(_dense(out[ticket].factors),
+                                   _dense(est.factors), rtol=1e-5, atol=1e-6)
+        for name in ("A_sketch", "B_sketch", "norm_A", "norm_B"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(out[ticket].summary, name)),
+                np.asarray(getattr(s, name)), rtol=1e-5, atol=1e-6)

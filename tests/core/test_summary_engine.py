@@ -6,10 +6,6 @@ backends, so for a fixed key every backend produces the same summary up to
 float reassociation ('rows' shares the reference's exact contraction and is
 bit-identical; scan/pallas/distributed reassociate the d-accumulation).
 """
-import os
-import subprocess
-import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp

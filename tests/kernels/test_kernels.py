@@ -51,7 +51,6 @@ def test_sketch_fused_block_shape_independence():
 
 def test_sketch_summary_fused_matches_core():
     """Kernel-backed summary is a valid SketchSummary for the full pipeline."""
-    from repro import core
     kk = jax.random.PRNGKey(0)
     A = jax.random.normal(kk, (500, 60))
     B = jax.random.normal(jax.random.fold_in(kk, 1), (500, 40))

@@ -2,8 +2,6 @@
 fusion io), collective parser, sharding rules, shapes/applicability."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs.shapes import SHAPES, cell_applicable
 from repro.roofline import analysis as roof
@@ -115,8 +113,6 @@ def test_shapes_registry_complete():
 
 def test_sharding_divisibility_fallback():
     """12 heads / 16-way model axis -> replicate (whisper case)."""
-    import os
-    import subprocess, sys, textwrap
     from tests.dist.helpers import run_with_devices
     out = run_with_devices("""
     import jax

@@ -6,20 +6,13 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:          # hypothesis is optional; see tests/_hyp.py
-    from tests._hyp import given, settings, strategies as st
-
 from repro.ckpt import checkpoint
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM, cooccurrence_stream
 from repro.models import build
 from repro.optim import AdamW, warmup_cosine
 from repro.optim import grad_compression as gc
-from repro.train import (TrainConfig, Trainer, TrainerConfig, init_state,
-                         make_train_step)
+from repro.train import TrainConfig, Trainer, TrainerConfig
 from repro.train import sketched_dense as sd
 
 
@@ -247,7 +240,6 @@ def test_cooccurrence_stream_order_independent_summary():
         merged = core.merge_summaries(merged, s)
     # reassemble in-order reference
     import numpy as onp
-    rows_all = onp.concatenate([c[0] for c in chunks])
     A = onp.zeros((d, n1), onp.float32)
     B = onp.zeros((d, n2), onp.float32)
     for rows, Ar, Br in chunks:
