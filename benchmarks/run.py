@@ -6,7 +6,11 @@ EstimationEngine sweep that feeds the perf trajectory.
 runs the ``estimation_backends`` sweep — every EstimationEngine
 (method, backend) cell timed on one summary, spectral error measured against
 the two-pass LELA baseline — and writes machine-readable
-``BENCH_estimation.json`` (``--out``); ``--smoke`` shrinks sizes for CI.
+``BENCH_estimation.json`` (``--out``). ``--suite streaming`` runs the
+``streaming_sweep`` — chunk-size x ingestion-mode cells (sequential /
+tree-merge / shuffled-rows StreamingSummarizer vs the one-shot backends)
+with parity errors — and writes ``BENCH_streaming.json``
+(``--out-streaming``); ``--smoke`` shrinks sizes for CI.
 
 Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
 spectrum-matched synthetic stand-ins validate the paper's *relative* claims
@@ -362,6 +366,89 @@ def estimation_backends(key, *, smoke: bool = False) -> dict:
     }
 
 
+def streaming_sweep(key, *, smoke: bool = False) -> dict:
+    """Streaming ingestion sweep: chunk-size x ingestion-mode on one pair.
+
+    Modes per method: ``one_shot/{reference,scan}`` (the in-memory baselines),
+    ``sequential/chunk<c>`` (StreamingSummarizer, contiguous chunks),
+    ``tree_merge/chunk<c>`` (independent per-chunk partial states reduced
+    pairwise — the distributed/Spark shape), and ``shuffled_rows/chunk<c>``
+    (arbitrary-order arrival via ``update_rows``). Every cell records wall
+    time, ingested rows/s, and max deviation from the reference summary —
+    the monoid contract says the deviation is float reassociation only.
+    """
+    if smoke:
+        d, n, k = 4096, 64, 64
+        chunks = (512, 1024)
+    else:
+        d, n, k = 32768, 256, 128
+        chunks = (1024, 4096, 16384)
+    A, B = _gd_pair(key, d, n, corr=0.3)
+    results = []
+    max_err = 0.0
+
+    def record(name, us, summary, ref):
+        nonlocal max_err
+        err = float(jnp.max(jnp.abs(summary.A_sketch - ref.A_sketch)))
+        max_err = max(max_err, err)
+        results.append({"name": name, "us_per_call": us,
+                        "rows_per_s": d / us * 1e6,
+                        "max_err_vs_reference": err})
+
+    refs = {}
+    for method in ("gaussian", "srht"):
+        ref, us = _timed(lambda m=method: core.build_summary(
+            key, A, B, k, method=m, backend="reference"))
+        refs[method] = ref
+        record(f"{method}/one_shot/reference", us, ref, ref)
+        s, us = _timed(lambda m=method: core.build_summary(
+            key, A, B, k, method=m, backend="scan", block=chunks[-1]))
+        record(f"{method}/one_shot/scan", us, s, ref)
+
+        summ = core.StreamingSummarizer(k, method=method)
+        for chunk in chunks:
+            def sequential(chunk=chunk, summ=summ):
+                st = summ.init(key, (d, n, n))
+                for off in range(0, d, chunk):
+                    st = summ.update(st, A[off:off + chunk],
+                                     B[off:off + chunk], off)
+                return summ.finalize(st)
+            s, us = _timed(sequential)
+            record(f"{method}/sequential/chunk{chunk}", us, s, ref)
+
+            def tree(chunk=chunk, summ=summ):
+                empty = summ.init(key, (d, n, n))
+                parts = [summ.update(empty, A[off:off + chunk],
+                                     B[off:off + chunk], off)
+                         for off in range(0, d, chunk)]
+                return summ.finalize(core.tree_merge(parts))
+            s, us = _timed(tree)
+            record(f"{method}/tree_merge/chunk{chunk}", us, s, ref)
+
+    # arbitrary-order arrival (gaussian; same contract for srht)
+    summ = core.StreamingSummarizer(k)
+    ref = refs["gaussian"]
+    perm = jax.random.permutation(key, d)
+    chunk = chunks[0]
+
+    def shuffled():
+        st = summ.init(key, (d, n, n))
+        for off in range(0, d, chunk):
+            ids = perm[off:off + chunk]
+            st = summ.update_rows(st, ids, A[ids], B[ids])
+        return summ.finalize(st)
+    s, us = _timed(shuffled)
+    record(f"gaussian/shuffled_rows/chunk{chunk}", us, s, ref)
+
+    return {
+        "suite": "streaming",
+        "config": {"d": d, "n": n, "k": k, "chunks": list(chunks),
+                   "smoke": smoke, "backend_platform": jax.default_backend()},
+        "results": results,
+        "max_parity_error": max_err,
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -403,20 +490,39 @@ def run_estimation_suite(key, out_path: str, smoke: bool) -> None:
           f"{report['jit_speedup_vs_reference']:.2f}x", flush=True)
 
 
+def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
+    report = streaming_sweep(jax.random.fold_in(
+        key, zlib.crc32(b"streaming") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,us_per_call,rows_per_s,max_err_vs_reference")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['us_per_call']:.0f},"
+              f"{rec['rows_per_s']:.0f},"
+              f"{rec['max_err_vs_reference']:.2e}", flush=True)
+    print(f"max_parity_error,{report['max_parity_error']:.2e}", flush=True)
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--suite", choices=("paper", "estimation", "all"),
+    p.add_argument("--suite",
+                   choices=("paper", "estimation", "streaming", "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
     p.add_argument("--out", default="BENCH_estimation.json",
                    help="JSON artifact path for the estimation suite")
+    p.add_argument("--out-streaming", default="BENCH_streaming.json",
+                   help="JSON artifact path for the streaming suite")
     args = p.parse_args()
     key = jax.random.PRNGKey(0)
     if args.suite in ("paper", "all"):
         run_paper_suite(key)
     if args.suite in ("estimation", "all"):
         run_estimation_suite(key, args.out, args.smoke)
+    if args.suite in ("streaming", "all"):
+        run_streaming_suite(key, args.out_streaming, args.smoke)
 
 
 if __name__ == "__main__":

@@ -14,9 +14,8 @@ tests/core/test_summary_engine.py):
       Simplest; fine whenever (k, d) fits in memory.
 * ``scan``        — stream row blocks, regenerating each block's operator
       slice on the fly. Use when d is huge (the operator never exists).
-* ``rows``        — arbitrary-order row streams via ``core.rows_summary``:
-      rows arrive as (global index, A row, B row) chunks, merge partial
-      summaries with ``core.merge_summaries``.
+* ``rows``        — arbitrary-order row streams: rows arrive as
+      (global index, A row, B row) chunks in any order.
 * ``pallas``      — fused TPU kernels (sketch + norms in one HBM pass;
       SRHT via the blocked-FWHT MXU kernel). Fastest on accelerators;
       runs interpreted on CPU so the same code path is CI-tested.
@@ -28,6 +27,12 @@ Spark choice); both work on every backend. Pass stacked (L, d, n) inputs to
 sketch L pairs in one vmapped dispatch, and ``precision='bf16'`` for
 bf16-in/f32-accumulate on accelerators. ``core.smppca(...)`` forwards
 ``method``/``backend``/``precision`` straight through.
+
+When the pair never fits in memory (or arrives over time), the same pass
+runs chunked through ``core.StreamingSummarizer`` — ``init / update /
+merge / finalize`` with any chunking or merge order, checkpointable
+mid-pass (see docs/streaming.md and examples/streaming_cooccurrence.py;
+the one-shot backends below are the it-fits-in-memory fast path).
 
 Choosing an estimation method (step 2-3)
 ----------------------------------------

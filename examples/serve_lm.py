@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
 (reduced configs; any of the 10 assigned archs works)
+
+The same serve layer also hosts sketch serving (``SketchService``): batched
+one-shot requests (submit/flush_factors) and streaming accumulator sessions
+(open_stream/append/query) for clients that feed row chunks over time —
+``--sketch-demo`` shows a session next to the LM engine; see
+docs/streaming.md for the lifecycle.
 """
 import argparse
 
@@ -10,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.models import build
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, ServeConfig, SketchService
 
 
 def main():
@@ -20,6 +26,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--sketch-demo", action="store_true",
+                    help="also run a SketchService streaming session")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -36,6 +44,20 @@ def main():
     out = eng.generate(batch)
     print(f"arch={cfg.name} generated {out.shape} tokens")
     print("row 0:", out[0, args.prompt_len:].tolist())
+
+    if args.sketch_demo:
+        # a client streams row chunks of an (A, B) pair over time and asks
+        # the live accumulator for the top-r factors of A^T B
+        svc = SketchService(k=64, backend="scan", block=256)
+        d, n = 2048, 96
+        A = jax.random.normal(key, (d, n))
+        B = jax.random.normal(jax.random.fold_in(key, 1), (d, n))
+        sid = svc.open_stream(key, d, n, n)
+        for off in range(0, d, 256):
+            svc.append(sid, A[off:off + 256], B[off:off + 256])
+        est = svc.stream_factors(sid, r=4)
+        print(f"sketch session: {int(svc.close_stream(sid).rows_seen)} rows "
+              f"-> factors U{est.factors.U.shape} V{est.factors.V.shape}")
 
 
 if __name__ == "__main__":

@@ -3,32 +3,49 @@ query x ad interaction matrix from a stream of rows arriving in ARBITRARY
 order, without ever storing the data (abstract + §1 of the paper).
 
     PYTHONPATH=src python examples/streaming_cooccurrence.py
+
+Uses the streaming API (``core.StreamingSummarizer``): chunks are absorbed
+with ``update_rows`` (explicit global row ids — arrival order is
+irrelevant), the pass is checkpointed mid-stream and resumed (the
+fault-tolerance story for week-long ingestion jobs), and partial states
+from independent workers merge associatively (``core.merge_states`` /
+``core.tree_merge``). See docs/streaming.md for the full contract.
 """
 import math
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import core
+from repro.ckpt import checkpoint
 from repro.data.pipeline import cooccurrence_stream
 
 key = jax.random.PRNGKey(0)
 d, n1, n2, rank = 8192, 300, 200, 4
 
 # --- one pass over a shuffled stream of (user row) observations ------------
-# the engine's 'rows' path: each chunk's summary depends only on
-# (key, global row ids), so arrival order is irrelevant and partial
-# summaries merge exactly (pass method="srht" with d_total=d for SRHT)
-summary = None
+# each chunk's contribution depends only on (key, global row ids), so
+# arrival order is irrelevant and partial states merge exactly
+# (StreamingSummarizer(k, method="srht") streams SRHT the same way)
+summ = core.StreamingSummarizer(k=192)
+state = summ.init(key, (d, n1, n2))
 rows_seen = 0
+ckpt_dir = tempfile.mkdtemp(prefix="smppca_stream_")
 for row_ids, A_rows, B_rows in cooccurrence_stream(
         seed=0, d=d, n1=n1, n2=n2, rank=rank, chunk=1024):
-    part = core.rows_summary(
-        key, jnp.asarray(row_ids), jnp.asarray(A_rows), jnp.asarray(B_rows),
-        192)
-    summary = part if summary is None else core.merge_summaries(summary, part)
+    state = summ.update_rows(state, jnp.asarray(row_ids),
+                             jnp.asarray(A_rows), jnp.asarray(B_rows))
     rows_seen += len(row_ids)
+    if rows_seen == d // 2:
+        # mid-pass checkpoint: a crashed ingestion job resumes exactly here
+        checkpoint.save_stream_state(ckpt_dir, step=rows_seen, state=state)
+        state = checkpoint.restore_stream_state(
+            ckpt_dir, like=summ.init(key, (d, n1, n2)))
+        print(f"checkpointed + restored at {int(state.rows_seen)} rows")
+
+summary = summ.finalize(state)
 print(f"streamed {rows_seen} rows in arbitrary order; "
       f"summary: sketches {summary.A_sketch.shape}/{summary.B_sketch.shape} "
       f"+ {n1 + n2} norms (vs {d * (n1 + n2)} raw values)")

@@ -113,6 +113,40 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
         return json.load(f)
 
 
+def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
+                      extra: Optional[dict] = None) -> str:
+    """Checkpoint a ``streaming.StreamState`` mid-pass (resumable ingestion).
+
+    A StreamState is already a pytree, so this is ``save`` plus a manifest
+    record of the coverage/config (rows_seen, k, d_total, srht or not) —
+    enough for an operator to see how far a pass got without loading arrays.
+    The carried key and SRHT plan are saved with the accumulators, so the
+    restored state keeps absorbing rows under the identical randomness.
+    """
+    meta = {
+        "kind": "stream_state",
+        "rows_seen": int(state.rows_seen),
+        "row_high": int(state.row_high),
+        "d_total": int(state.d_total),
+        "k": int(state.A_acc.shape[0]),
+        "srht": state.signs is not None,
+    }
+    meta.update(extra or {})
+    return save(ckpt_dir, step, state, keep=keep, extra=meta)
+
+
+def restore_stream_state(ckpt_dir: str, like, step: Optional[int] = None):
+    """Restore a ``StreamState`` saved by ``save_stream_state``.
+
+    ``like`` is a structurally matching state — in practice
+    ``summarizer.init(key, shapes)`` with the same config the pass started
+    from (key/plan values are overwritten by the checkpointed ones).
+    Round-trips exactly: resuming then finalizing is bit-identical to the
+    uninterrupted pass (tested in tests/core/test_streaming.py).
+    """
+    return restore(ckpt_dir, like, step=step)
+
+
 def _gc(ckpt_dir: str, keep: int) -> None:
     steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
                    if (m := re.fullmatch(r"step_(\d+)", d)))

@@ -10,6 +10,7 @@ Public API:
     smppca / smppca_from_summary                          (Alg 1)
     lela / sketch_svd / optimal_rank_r / product_of_pcas  (baselines)
     distributed_sketch_summary / distributed_smppca       (multi-device pass)
+    StreamingSummarizer / merge_states / finalize_state   (chunked ingestion)
 """
 from repro.core.types import (
     EstimateResult, LowRankFactors, SampleSet, SketchSummary, SMPPCAResult)
@@ -33,4 +34,8 @@ from repro.core.smppca import (
 from repro.core.lela import lela, norms_only_summary
 from repro.core.baselines import optimal_rank_r, product_of_pcas, sketch_svd
 from repro.core.distributed import (
-    distributed_sketch_summary, distributed_smppca)
+    distributed_sketch_summary, distributed_smppca,
+    distributed_streaming_summary, distributed_streaming_update)
+from repro.core.streaming import (
+    StreamingSummarizer, StreamState, finalize_state, merge_states,
+    tree_merge)

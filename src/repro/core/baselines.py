@@ -20,6 +20,7 @@ from repro.core.types import LowRankFactors
 
 
 def optimal_rank_r(A: jax.Array, B: jax.Array, r: int) -> LowRankFactors:
+    """Oracle: exact top-r SVD of the materialized product A^T B."""
     M = A.T @ B
     U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
     return LowRankFactors(U[:, :r] * s[:r], Vt[:r].T)

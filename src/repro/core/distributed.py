@@ -55,7 +55,7 @@ def distributed_sketch_summary(mesh: Mesh, axis: str, key: jax.Array,
     elif method != "gaussian":
         raise ValueError(f"unknown sketch method {method!r}")
 
-    def local_pass(A_loc, B_loc):
+    def _local_pass(A_loc, B_loc):
         idx = jax.lax.axis_index(axis)
         row0 = idx * shard_rows
         gids = row0 + jnp.arange(shard_rows)
@@ -76,11 +76,84 @@ def distributed_sketch_summary(mesh: Mesh, axis: str, key: jax.Array,
         return SketchSummary(As, Bs, jnp.sqrt(na2), jnp.sqrt(nb2))
 
     fn = shard_map(
-        local_pass, mesh=mesh,
+        _local_pass, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
         out_specs=SketchSummary(P(None, None), P(None, None), P(None), P(None)),
     )
     return fn(A, B)
+
+
+def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
+                                 state, A_slab: jax.Array, B_slab: jax.Array,
+                                 row_offset: int = 0):
+    """Absorb a row-sharded slab into a replicated ``StreamState``.
+
+    The slab's rows (global ids ``row_offset .. row_offset + slab_d``) are
+    sharded over ``axis``; each device computes its shard's contribution with
+    its slice of the global projection (the engine's (key, global row id)
+    contract), then ONE psum merges the per-device partial states — the
+    all-reduce IS the ``streaming.merge`` tree-reduction, executed on the ICI
+    (Spark's treeAggregate combiner collapsed into a collective). The merged
+    state is returned replicated, ready for the next slab or ``finalize``.
+    """
+    from repro.core.streaming import StreamState, merge_states
+    n_shards = mesh.shape[axis]
+    slab_d = A_slab.shape[0]
+    if slab_d % n_shards != 0:
+        raise ValueError(f"slab rows ({slab_d}) must be a multiple of the "
+                         f"mesh axis size ({n_shards})")
+    shard_rows = slab_d // n_shards
+    key, signs, srows = state.key, state.signs, state.srows
+    k = summarizer.k
+
+    def _local_delta(A_loc, B_loc):
+        idx = jax.lax.axis_index(axis)
+        gids = row_offset + idx * shard_rows + jnp.arange(shard_rows)
+        from repro.core.streaming import _chunk_contribution
+        dA, dB, dna2, dnb2 = _chunk_contribution(
+            key, signs, srows, A_loc, B_loc, gids, k=k,
+            method=summarizer.method, precision=summarizer.precision)
+        # the psum over shards IS the merge of the per-device partial states
+        return (jax.lax.psum(dA, axis), jax.lax.psum(dB, axis),
+                jax.lax.psum(dna2, axis), jax.lax.psum(dnb2, axis))
+
+    fn = shard_map(_local_delta, mesh=mesh,
+                   in_specs=(P(axis, None), P(axis, None)),
+                   out_specs=(P(None, None), P(None, None), P(None), P(None)))
+    dA, dB, dna2, dnb2 = fn(A_slab, B_slab)
+    delta = StreamState(key=None, A_acc=dA, B_acc=dB, na2=dna2, nb2=dnb2,
+                        rows_seen=jnp.asarray(slab_d, jnp.int32),
+                        row_high=jnp.asarray(row_offset + slab_d, jnp.int32),
+                        d_total=state.d_total, signs=signs, srows=srows)
+    return merge_states(state, delta)
+
+
+def distributed_streaming_summary(mesh: Mesh, axis: str, key: jax.Array,
+                                  A: jax.Array, B: jax.Array, k: int,
+                                  method: str = "gaussian",
+                                  precision: str | None = None,
+                                  slab: int | None = None):
+    """Full streaming pass over row-sharded (A, B): slab-chunked ingestion +
+    per-slab tree-merge. With ``slab=None`` the whole pair is one slab —
+    semantically ``distributed_sketch_summary`` re-expressed through the
+    streaming monoid (parity-tested in tests/core/test_streaming.py)."""
+    from repro.core.streaming import StreamingSummarizer
+    d = A.shape[0]
+    n_shards = mesh.shape[axis]
+    if d % n_shards != 0:
+        raise ValueError(f"row dim ({d}) must be a multiple of the mesh "
+                         f"axis size ({n_shards})")
+    summ = StreamingSummarizer(k, method=method, precision=precision)
+    state = summ.init(key, (d, A.shape[1], B.shape[1]))
+    slab = d if slab is None else slab
+    # round the slab to a shard multiple so every slab — including the
+    # trailing partial one — splits evenly over the mesh axis
+    slab = max(n_shards, slab - slab % n_shards)
+    for off in range(0, d, slab):
+        state = distributed_streaming_update(
+            mesh, axis, summ, state, A[off:off + slab], B[off:off + slab],
+            row_offset=off)
+    return summ.finalize(state)
 
 
 def distributed_smppca(mesh: Mesh, axis: str, key: jax.Array, A: jax.Array,

@@ -71,10 +71,10 @@ def register_estimator(method: str, backend: str):
     """Register ``fn(key, summary, r, *, m, T, use_splits, exact_pair)`` for
     one (method, backend) cell. Registering an existing cell overrides it —
     the hook for experiment-specific estimators."""
-    def deco(fn):
+    def _deco(fn):
         _REGISTRY[(method, backend)] = fn
         return fn
-    return deco
+    return _deco
 
 
 def estimators() -> tuple:
@@ -106,12 +106,12 @@ def exact_entries(A: jax.Array, B: jax.Array, rows: jax.Array,
     rp = jnp.pad(rows, (0, pad))
     cp = jnp.pad(cols, (0, pad))
 
-    def body(_, rc):
+    def _body(_, rc):
         r_, c_ = rc
         return None, jnp.sum(A[:, r_] * B[:, c_], axis=0)
 
     _, vals = jax.lax.scan(
-        body, None, (rp.reshape(-1, chunk), cp.reshape(-1, chunk)))
+        _body, None, (rp.reshape(-1, chunk), cp.reshape(-1, chunk)))
     return vals.reshape(-1)[:m]
 
 
@@ -123,12 +123,12 @@ def implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
     G = jax.random.normal(key, (n2, p))
     Y = matvec(G)
 
-    def body(_, Y):
+    def _body(_, Y):
         Q, _ = jnp.linalg.qr(Y)
         Z, _ = jnp.linalg.qr(rmatvec(Q))
         return matvec(Z)
 
-    Y = jax.lax.fori_loop(0, n_iter, body, Y)
+    Y = jax.lax.fori_loop(0, n_iter, _body, Y)
     Q, _ = jnp.linalg.qr(Y)
     Bt = rmatvec(Q)                          # (n2, p)
     Ub, s, Vt = jnp.linalg.svd(Bt.T, full_matrices=False)
@@ -277,6 +277,19 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
     m:       Omega sample budget; defaults to the paper's ~10 n r log n.
              Ignored by direct_svd.
     T:       WAltMin iteration pairs. use_splits: Alg-2 sample splitting.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.summary_engine import build_summary
+    >>> key = jax.random.PRNGKey(0)
+    >>> A = jax.random.normal(key, (128, 12))
+    >>> B = jax.random.normal(jax.random.fold_in(key, 1), (128, 10))
+    >>> summary = build_summary(key, A, B, 32)          # step 1: one pass
+    >>> res = estimate_product(jax.random.fold_in(key, 2), summary, r=3,
+    ...                        m=400, T=2)              # steps 2-3
+    >>> (res.factors.U.shape, res.factors.V.shape)      # A^T B ~= U @ V.T
+    ((12, 3), (10, 3))
+    >>> res.samples.rows.shape                          # the Omega sample
+    (400,)
     """
     if method not in METHODS:
         raise ValueError(

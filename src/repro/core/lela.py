@@ -33,6 +33,7 @@ def norms_only_summary(A: jax.Array, B: jax.Array) -> SketchSummary:
 @functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
 def lela(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, m: int,
          T: int = 10, use_splits: bool = False) -> LowRankFactors:
+    """LELA two-pass baseline: biased sample + exact entries + WAltMin."""
     summary = norms_only_summary(A, B)
     est = estimation_engine.estimate_product(
         key, summary, r, method="lela_waltmin", backend="jit", m=m, T=T,

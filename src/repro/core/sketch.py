@@ -36,10 +36,10 @@ def pi_rows(key: jax.Array, row_idx: jax.Array, k: int, dtype=jnp.float32) -> ja
     stream may deliver rows in arbitrary order and the final sketch is
     identical (tested in tests/core/test_sketch.py).
     """
-    def one(i):
+    def _one(i):
         return jax.random.normal(jax.random.fold_in(key, i), (k,), dtype)
 
-    return jax.vmap(one)(row_idx.astype(jnp.uint32)) / jnp.sqrt(k).astype(dtype)
+    return jax.vmap(_one)(row_idx.astype(jnp.uint32)) / jnp.sqrt(k).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +96,7 @@ def srht_sketch(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def column_norms(X: jax.Array) -> jax.Array:
+    """Exact L2 column norms, accumulated in float32."""
     return jnp.sqrt(jnp.sum(X.astype(jnp.float32) ** 2, axis=0))
 
 

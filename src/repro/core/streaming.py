@@ -1,0 +1,326 @@
+"""StreamingSummarizer — mergeable one-pass summaries over row chunks.
+
+The paper's whole point is that the Step-1 summary of (A, B) can be built in
+a *single pass*; this module makes that operational when the matrices never
+fit in memory at once. It factors ``build_summary`` into the four-phase
+contract of a mergeable sketch (Tropp et al., "Practical sketching
+algorithms for low-rank matrix approximation"):
+
+    init(key, shapes)                       -> StreamState   (empty monoid id)
+    update(state, A_chunk, B_chunk, off)    -> StreamState   (absorb rows)
+    merge(s1, s2)                           -> StreamState   (associative +)
+    finalize(state)                         -> SketchSummary (sqrt the norms)
+
+Because every accumulator field (sketches and *squared* column norms) is
+linear in the data rows, ``StreamState`` is a commutative monoid under
+``merge``: chunked ingestion, any merge order, and the one-shot
+``build_summary`` backends all produce the same summary. The randomness
+contract is the SummaryEngine's: the projection column for global row ``i``
+is a pure function of ``(key, i)`` (gaussian ``fold_in``; SRHT via the
+popcount Hadamard identity from one ``srht_plan``), so a chunk's
+contribution depends only on its rows' global indices — never on when, where,
+or in what order the chunk was seen.
+
+Exactness grades (tested in tests/core/test_streaming.py):
+
+* sequential ingestion at a fixed chunk size ``c`` (rows 0..d in order) is
+  **bit-identical** to ``build_summary(backend='scan', block=c)`` — the
+  update performs the identical float ops as the scan body;
+* merge is **bit-commutative** (float add commutes);
+* reassociating the merge tree (different chunk sizes, shuffled arrival,
+  distributed psum) agrees to float-reassociation tolerance, the same
+  contract the engine's cross-backend parity tests already enforce.
+
+``StreamState`` is a NamedTuple pytree: it jits, vmaps, psums (the
+distributed tree-reduction in ``core/distributed.py`` merges per-device
+partial states with one all-reduce), and checkpoints
+(``ckpt.checkpoint.save_stream_state`` / ``restore_stream_state`` give
+resumable passes).
+
+>>> import jax, jax.numpy as jnp
+>>> key = jax.random.PRNGKey(0)
+>>> A = jax.random.normal(key, (64, 6))
+>>> B = jax.random.normal(jax.random.fold_in(key, 1), (64, 4))
+>>> summ = StreamingSummarizer(k=8)
+>>> state = summ.init(key, (64, 6, 4))
+>>> state = summ.update(state, A[:32], B[:32], 0)     # rows arrive in chunks
+>>> state = summ.update(state, A[32:], B[32:], 32)
+>>> s = summ.finalize(state)
+>>> (s.A_sketch.shape, s.B_sketch.shape, int(state.rows_seen))
+((8, 6), (8, 4), 64)
+>>> from repro.core.summary_engine import build_summary
+>>> ref = build_summary(key, A, B, 8, backend="reference")
+>>> bool(jnp.allclose(s.A_sketch, ref.A_sketch, atol=1e-5))
+True
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.summary_engine import (
+    METHODS, _cast, _sketch_dot, projection_rows, srht_plan)
+from repro.core.types import SketchSummary
+
+
+class StreamState(NamedTuple):
+    """Partial one-pass summary: the mergeable accumulator pytree.
+
+    Norms are carried *squared* (``na2``/``nb2``) so ``merge`` is a plain sum
+    on every field — the square root happens once, in ``finalize``.
+    ``signs``/``srows`` hold the SRHT plan (None for gaussian); ``key`` is
+    carried so a restored checkpoint can keep absorbing rows with the same
+    randomness. ``rows_seen`` only tracks coverage for logging/manifests —
+    the math never reads it.
+    """
+
+    key: Optional[jax.Array]       # base PRNG key (None for wrapped taps)
+    A_acc: jax.Array               # (k, n1) running Pi @ A
+    B_acc: jax.Array               # (k, n2) running Pi @ B
+    na2: jax.Array                 # (n1,) running squared column norms of A
+    nb2: jax.Array                 # (n2,) running squared column norms of B
+    rows_seen: jax.Array           # () int32 total rows absorbed
+    row_high: jax.Array            # () int32 high-water mark: 1 + max absorbed
+                                   #    global row id (0 when empty) — what a
+                                   #    resumed contiguous cursor starts from
+    d_total: jax.Array             # () int32 global streamed dim (-1: unknown)
+    signs: Optional[jax.Array]     # (d,) SRHT rademacher signs, else None
+    srows: Optional[jax.Array]     # (k,) SRHT sampled Hadamard rows, else None
+
+    @property
+    def k(self) -> int:
+        """Sketch size."""
+        return self.A_acc.shape[0]
+
+
+def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
+    """Shape-level compatibility guard (cheap; skips traced fields)."""
+    if s1.A_acc.shape != s2.A_acc.shape or s1.B_acc.shape != s2.B_acc.shape:
+        raise ValueError(
+            f"cannot merge stream states of different shapes: "
+            f"{s1.A_acc.shape}/{s1.B_acc.shape} vs "
+            f"{s2.A_acc.shape}/{s2.B_acc.shape}")
+    if (s1.signs is None) != (s2.signs is None):
+        raise ValueError("cannot merge gaussian and srht stream states")
+
+
+def _check_row_bounds(state: StreamState, lo: int, hi: int) -> None:
+    """Eagerly reject global row ids outside [0, d_total).
+
+    Out-of-range ids would otherwise corrupt the summary silently (SRHT
+    clamps into the sign vector; gaussian folds in a wrong index). Skipped
+    under tracing (concrete values unavailable) — streaming ingestion is
+    an eager host loop in practice, so the guard fires where it matters.
+    """
+    if isinstance(state.d_total, jax.core.Tracer):
+        return
+    d = int(state.d_total)
+    if lo < 0 or hi >= d:
+        raise ValueError(
+            f"global row ids [{lo}, {hi}] fall outside the declared "
+            f"streamed dimension d_total={d} from init()")
+
+
+def merge_states(s1: StreamState, s2: StreamState) -> StreamState:
+    """Combine summaries of disjoint row sets (the monoid operation).
+
+    A plain sum on every accumulator field: commutative bit-for-bit,
+    associative to float reassociation. The key/plan are taken from ``s1``
+    (both operands must descend from the same ``init``).
+    """
+    _check_mergeable(s1, s2)
+    return s1._replace(
+        A_acc=s1.A_acc + s2.A_acc,
+        B_acc=s1.B_acc + s2.B_acc,
+        na2=s1.na2 + s2.na2,
+        nb2=s1.nb2 + s2.nb2,
+        rows_seen=s1.rows_seen + s2.rows_seen,
+        row_high=jnp.maximum(s1.row_high, s2.row_high))
+
+
+def tree_merge(states: Sequence[StreamState]) -> StreamState:
+    """Log-depth pairwise reduction of partial states (Spark treeAggregate
+    shape; associativity makes any reduction tree equivalent)."""
+    states = list(states)
+    if not states:
+        raise ValueError("tree_merge needs at least one state")
+    while len(states) > 1:
+        nxt = [merge_states(states[i], states[i + 1])
+               for i in range(0, len(states) - 1, 2)]
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    return states[0]
+
+
+def finalize_state(state: StreamState) -> SketchSummary:
+    """StreamState -> the Step-1 ``SketchSummary`` (sqrt the squared norms)."""
+    return SketchSummary(state.A_acc, state.B_acc,
+                         jnp.sqrt(state.na2), jnp.sqrt(state.nb2))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "method", "precision"))
+def _chunk_contribution(key, signs, srows, A_chunk, B_chunk, gids, *,
+                        k: int, method: str, precision: Optional[str]):
+    """(dA, dB, dna2, dnb2) for one chunk of rows with global ids ``gids``.
+
+    Performs the exact float ops of the scan backend's body — the basis of
+    the bit-parity guarantee for aligned sequential ingestion.
+    """
+    plan = None if method == "gaussian" else (signs, srows)
+    P = projection_rows(key, gids, k, method=method, plan=plan)
+    Ac, Bc = _cast(A_chunk, precision), _cast(B_chunk, precision)
+    return (_sketch_dot(P, Ac, precision),
+            _sketch_dot(P, Bc, precision),
+            jnp.sum(Ac.astype(jnp.float32) ** 2, axis=0),
+            jnp.sum(Bc.astype(jnp.float32) ** 2, axis=0))
+
+
+class StreamingSummarizer:
+    """Chunked/mergeable front-end to the SummaryEngine's single pass.
+
+    Configure once (sketch size, method, precision); then drive any number
+    of independent streams through ``init -> update* -> merge* -> finalize``.
+    All randomness comes from the ``init`` key via the engine's
+    (key, global row index) contract, so the result is independent of
+    chunking and merge order, and matches the one-shot ``build_summary``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> summ = StreamingSummarizer(k=4, method="srht")
+    >>> key = jax.random.PRNGKey(7)
+    >>> A = jax.random.normal(key, (32, 5))
+    >>> B = jax.random.normal(jax.random.fold_in(key, 1), (32, 3))
+    >>> left = summ.init(key, (32, 5, 3))        # two independent workers ...
+    >>> right = summ.init(key, (32, 5, 3))
+    >>> left = summ.update(left, A[:16], B[:16], 0)
+    >>> right = summ.update(right, A[16:], B[16:], 16)
+    >>> s = summ.finalize(summ.merge(left, right))   # ... merged associatively
+    >>> s.B_sketch.shape
+    (4, 3)
+    """
+
+    def __init__(self, k: int, *, method: str = "gaussian",
+                 precision: Optional[str] = None):
+        if method not in METHODS:
+            raise ValueError(
+                f"unknown sketch method {method!r} (use {METHODS})")
+        self.k = k
+        self.method = method
+        self.precision = precision
+
+    # -- contract ----------------------------------------------------------
+
+    def init(self, key: jax.Array, shapes: Tuple[int, int, int]) -> StreamState:
+        """Empty state for a (d, n1, n2) stream under ``key``.
+
+        ``d`` is the *global* streamed dimension: every update validates its
+        row ids against it, and SRHT additionally derives its sign/sample
+        plan from (key, d) here — the one O(d) step; every update is
+        O(chunk).
+        """
+        d, n1, n2 = shapes
+        if self.method == "srht":
+            signs, srows, _ = srht_plan(key, d, self.k)
+        else:
+            signs = srows = None
+        return StreamState(
+            key=key,
+            A_acc=jnp.zeros((self.k, n1), jnp.float32),
+            B_acc=jnp.zeros((self.k, n2), jnp.float32),
+            na2=jnp.zeros((n1,), jnp.float32),
+            nb2=jnp.zeros((n2,), jnp.float32),
+            rows_seen=jnp.zeros((), jnp.int32),
+            row_high=jnp.zeros((), jnp.int32),
+            d_total=jnp.asarray(d, jnp.int32),
+            signs=signs, srows=srows)
+
+    def update(self, state: StreamState, A_chunk: jax.Array,
+               B_chunk: jax.Array, row_offset) -> StreamState:
+        """Absorb a contiguous chunk of rows starting at global ``row_offset``.
+
+        ``row_offset`` may be a traced scalar — recompilation keys only on
+        the chunk shape. Chunks may arrive in any order and may even repeat
+        across partial states as long as each global row is absorbed exactly
+        once overall (the summary is a sum over rows). A zero-row chunk is
+        the monoid identity: a no-op. With a concrete ``row_offset`` the
+        bounds check costs no device work (the chunk is contiguous).
+        """
+        t = A_chunk.shape[0]
+        if B_chunk.shape[0] != t:
+            raise ValueError(f"chunk row counts differ: "
+                             f"{A_chunk.shape} vs {B_chunk.shape}")
+        if t == 0:
+            return state
+        if isinstance(row_offset, jax.core.Tracer):
+            hi1 = jnp.asarray(row_offset, jnp.int32) + t
+        else:
+            off = int(row_offset)
+            _check_row_bounds(state, off, off + t - 1)
+            hi1 = off + t
+        gids = (jnp.asarray(row_offset, jnp.int32)
+                + jnp.arange(t, dtype=jnp.int32))
+        return self._absorb(state, A_chunk, B_chunk, gids, t, hi1)
+
+    def update_rows(self, state: StreamState, row_ids: jax.Array,
+                    A_rows: jax.Array, B_rows: jax.Array) -> StreamState:
+        """Absorb rows with explicit global ids (arbitrary-order arrival —
+        the paper's shuffled co-occurrence stream). An empty id array is
+        a no-op (the monoid identity)."""
+        t = A_rows.shape[0]
+        ids = jnp.asarray(row_ids, jnp.int32)
+        if B_rows.shape[0] != t or ids.shape[0] != t:
+            raise ValueError(
+                f"row ids / chunk row counts differ: ids {ids.shape}, "
+                f"A {A_rows.shape}, B {B_rows.shape}")
+        if t == 0:
+            return state
+        if isinstance(ids, jax.core.Tracer):
+            hi1 = jnp.max(ids) + 1
+        else:
+            # one fused device fetch for both bounds
+            lo, hi = (int(v) for v in
+                      jax.device_get(jnp.stack([jnp.min(ids),
+                                                jnp.max(ids)])))
+            _check_row_bounds(state, lo, hi)
+            hi1 = hi + 1
+        return self._absorb(state, A_rows, B_rows, ids, t, hi1)
+
+    def merge(self, s1: StreamState, s2: StreamState) -> StreamState:
+        """Alias of ``merge_states`` (module-level, needs no config)."""
+        return merge_states(s1, s2)
+
+    def finalize(self, state: StreamState) -> SketchSummary:
+        """Alias of ``finalize_state`` (module-level, needs no config)."""
+        return finalize_state(state)
+
+    # -- conveniences ------------------------------------------------------
+
+    def summarize_chunks(self, key: jax.Array,
+                         shapes: Tuple[int, int, int],
+                         chunks: Iterable[Tuple[jax.Array, jax.Array]]
+                         ) -> SketchSummary:
+        """One-call sequential ingestion: ``(A_chunk, B_chunk)`` pairs in row
+        order -> finalized summary."""
+        state = self.init(key, shapes)
+        off = 0
+        for A_chunk, B_chunk in chunks:
+            state = self.update(state, A_chunk, B_chunk, off)
+            off += A_chunk.shape[0]
+        return self.finalize(state)
+
+    def _absorb(self, state, A_chunk, B_chunk, gids, t, hi1) -> StreamState:
+        if A_chunk.shape[0] != B_chunk.shape[0]:
+            raise ValueError(f"chunk row counts differ: "
+                             f"{A_chunk.shape} vs {B_chunk.shape}")
+        dA, dB, dna2, dnb2 = _chunk_contribution(
+            state.key, state.signs, state.srows, A_chunk, B_chunk, gids,
+            k=self.k, method=self.method, precision=self.precision)
+        return state._replace(
+            A_acc=state.A_acc + dA, B_acc=state.B_acc + dB,
+            na2=state.na2 + dna2, nb2=state.nb2 + dnb2,
+            rows_seen=state.rows_seen + jnp.int32(t),
+            row_high=jnp.maximum(state.row_high,
+                                 jnp.asarray(hi1, jnp.int32)))

@@ -61,13 +61,14 @@ _BACKENDS: Dict[str, Callable] = {}
 
 def register_backend(name: str):
     """Register ``fn(key, A, B, k, *, method, block, precision, **kw)``."""
-    def deco(fn):
+    def _deco(fn):
         _BACKENDS[name] = fn
         return fn
-    return deco
+    return _deco
 
 
 def backends() -> tuple:
+    """All registered summary backend names."""
     return tuple(sorted(_BACKENDS))
 
 
@@ -238,7 +239,7 @@ def _scan_backend(key, A, B, k: int, *, method: str = "gaussian",
         signs_blk = jnp.ones((nblk, block), jnp.float32)
         srows = None
 
-    def body(carry, inputs):
+    def _body(carry, inputs):
         As, Bs, na2, nb2 = carry
         bi, Ab, Bb, sb = inputs
         gids = bi * block + jnp.arange(block)
@@ -256,7 +257,7 @@ def _scan_backend(key, A, B, k: int, *, method: str = "gaussian",
     init = (jnp.zeros((k, n1), jnp.float32), jnp.zeros((k, n2), jnp.float32),
             jnp.zeros((n1,), jnp.float32), jnp.zeros((n2,), jnp.float32))
     (As, Bs, na2, nb2), _ = jax.lax.scan(
-        body, init, (jnp.arange(nblk), Ablk, Bblk, signs_blk))
+        _body, init, (jnp.arange(nblk), Ablk, Bblk, signs_blk))
     return SketchSummary(As, Bs, jnp.sqrt(na2), jnp.sqrt(nb2))
 
 
@@ -279,7 +280,7 @@ def _pallas_backend(key, A, B, k: int, *, method: str = "gaussian",
         signs, rows, dp = srht_plan(key, d, k)
         signs_p = jnp.pad(signs, (0, dp - d), constant_values=1.0)
 
-        def one(X):
+        def _one(X):
             # the FWHT kernel casts tiles to f32 in its body; feed the
             # (possibly reduced-precision) input straight in
             Xp = jnp.pad(_cast(X, precision), ((0, dp - d), (0, 0)))
@@ -287,7 +288,7 @@ def _pallas_backend(key, A, B, k: int, *, method: str = "gaussian",
             return HX[rows] * jnp.sqrt(dp / k)
 
         Ac, Bc = _cast(A, precision), _cast(B, precision)
-        return SketchSummary(one(A), one(B), column_norms(Ac),
+        return SketchSummary(_one(A), _one(B), column_norms(Ac),
                              column_norms(Bc))
     raise ValueError(f"unknown sketch method {method!r} (use {METHODS})")
 
@@ -337,6 +338,17 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
     block:   row-block size for the scan backend.
     precision: None/'f32' | 'bf16' (bf16 inputs, f32 accumulation).
     mesh/axis: required for backend='distributed' (rows sharded over axis).
+
+    >>> import jax, jax.numpy as jnp
+    >>> key = jax.random.PRNGKey(0)
+    >>> A = jax.random.normal(key, (64, 8))
+    >>> B = jax.random.normal(jax.random.fold_in(key, 1), (64, 6))
+    >>> s = build_summary(key, A, B, 16, backend="scan", block=32)
+    >>> (s.A_sketch.shape, s.B_sketch.shape, s.norm_A.shape, s.norm_B.shape)
+    ((16, 8), (16, 6), (8,), (6,))
+    >>> ref = build_summary(key, A, B, 16)          # reference backend
+    >>> bool(jnp.allclose(s.A_sketch, ref.A_sketch, atol=1e-5))
+    True
     """
     if method not in METHODS:
         raise ValueError(f"unknown sketch method {method!r} (use {METHODS})")

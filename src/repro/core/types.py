@@ -25,22 +25,27 @@ class SketchSummary(NamedTuple):
 
     @property
     def k(self) -> int:
+        """Sketch size (rows of the sketches)."""
         return self.A_sketch.shape[0]
 
     @property
     def n1(self) -> int:
+        """Columns of A."""
         return self.A_sketch.shape[1]
 
     @property
     def n2(self) -> int:
+        """Columns of B."""
         return self.B_sketch.shape[1]
 
     @property
     def frob_A(self) -> jax.Array:
+        """Frobenius norm of A (from the retained column norms)."""
         return jnp.sqrt(jnp.sum(self.norm_A ** 2))
 
     @property
     def frob_B(self) -> jax.Array:
+        """Frobenius norm of B (from the retained column norms)."""
         return jnp.sqrt(jnp.sum(self.norm_B ** 2))
 
 
@@ -59,6 +64,7 @@ class SampleSet(NamedTuple):
 
     @property
     def m(self) -> int:
+        """Static sample budget (padded length)."""
         return self.rows.shape[0]
 
 
@@ -70,9 +76,11 @@ class LowRankFactors(NamedTuple):
 
     @property
     def r(self) -> int:
+        """Factor rank."""
         return self.U.shape[1]
 
     def dense(self) -> jax.Array:
+        """Materialize the (n1, n2) approximation U @ V^T."""
         return self.U @ self.V.T
 
 
@@ -91,6 +99,8 @@ class EstimateResult(NamedTuple):
 
 
 class SMPPCAResult(NamedTuple):
+    """Full Algorithm-1 output: factors plus the intermediates."""
+
     factors: LowRankFactors
     summary: SketchSummary
     samples: SampleSet

@@ -51,13 +51,13 @@ def coo_topr_svd(key: jax.Array, rows: jax.Array, cols: jax.Array,
     G = jax.random.normal(key, (n2, p))
     Y = coo_matmat(rows, cols, vals, G, n1)    # (n1, p)
 
-    def body(_, Y):
+    def _body(_, Y):
         Q, _ = jnp.linalg.qr(Y)
         Z = coo_rmatmat(rows, cols, vals, Q, n2)   # (n2, p)
         Z, _ = jnp.linalg.qr(Z)
         return coo_matmat(rows, cols, vals, Z, n1)
 
-    Y = jax.lax.fori_loop(0, n_iter, body, Y)
+    Y = jax.lax.fori_loop(0, n_iter, _body, Y)
     Q, _ = jnp.linalg.qr(Y)                    # (n1, p)
     Bt = coo_rmatmat(rows, cols, vals, Q, n2)  # (n2, p) = (Q^T S)^T
     Ub, s, Vt = jnp.linalg.svd(Bt.T, full_matrices=False)
@@ -127,14 +127,14 @@ def _waltmin_impl(key: jax.Array, samples: SampleSet, values: jax.Array,
     else:
         subset = jnp.zeros((samples.m,), jnp.int32)
 
-    def wmask(s):
+    def _wmask(s):
         if not use_splits:
             return w_all
         # splits partition Omega; rescale q_hat by subset fraction
         return jnp.where(subset == s, w_all * (2 * T + 1), 0.0)
 
     # --- init: SVD of R_Omega0(M~), trim, orthonormalize -------------------
-    w0 = wmask(0)
+    w0 = _wmask(0)
     U0, _, _ = coo_topr_svd(k_svd, samples.rows, samples.cols, w0 * vals,
                             n1, n2, r)
     U = _trim_rows(U0, norm_A, r)
@@ -144,23 +144,23 @@ def _waltmin_impl(key: jax.Array, samples: SampleSet, values: jax.Array,
     # space* of the other; orthonormalizing the carried factor between steps
     # removes the scale drift that makes raw ALS diverge in f32 (only the
     # span matters — the final V solve restores a consistent scaled pair).
-    def half_pair(U, t):
-        V = _ls_step(samples.rows, samples.cols, vals, wmask(2 * t + 1), U, n2)
+    def _half_pair(U, t):
+        V = _ls_step(samples.rows, samples.cols, vals, _wmask(2 * t + 1), U, n2)
         Vq, _ = jnp.linalg.qr(V)
-        Unew = _ls_step(samples.cols, samples.rows, vals, wmask(2 * t + 2),
+        Unew = _ls_step(samples.cols, samples.rows, vals, _wmask(2 * t + 2),
                         Vq, n1)
         Uq, _ = jnp.linalg.qr(Unew)
         return Uq
 
     if scan:
-        U_final, _ = jax.lax.scan(lambda U, t: (half_pair(U, t), None),
+        U_final, _ = jax.lax.scan(lambda U, t: (_half_pair(U, t), None),
                                   U, jnp.arange(T))
     else:
         U_final = U
         for t in range(T):
-            U_final = half_pair(U_final, t)
+            U_final = _half_pair(U_final, t)
     # final V solve against the last (orthonormal) U: consistent scaled pair
-    V_final = _ls_step(samples.rows, samples.cols, vals, wmask(2 * T - 1),
+    V_final = _ls_step(samples.rows, samples.cols, vals, _wmask(2 * T - 1),
                        U_final, n2)
     return LowRankFactors(U_final, V_final)
 

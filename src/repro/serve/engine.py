@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.estimation_engine import estimate_product
+from repro.core.streaming import StreamingSummarizer, StreamState
 from repro.core.summary_engine import build_summary
 from repro.core.types import LowRankFactors, SketchSummary
 from repro.models.factory import Model
@@ -68,6 +69,16 @@ class Engine:
         return jnp.concatenate(out, axis=1)
 
 
+@dataclasses.dataclass
+class _StreamSession:
+    """One live accumulator: its summarizer config, state, and append cursor."""
+    key: jax.Array
+    summarizer: StreamingSummarizer
+    state: StreamState
+    next_row: int
+    rows_seen: int
+
+
 class SketchService:
     """Micro-batching front-end for one-pass summary requests.
 
@@ -79,12 +90,37 @@ class SketchService:
     mode), preserving per-request keys — results are bit-identical to
     dispatching each request alone.
 
-    >>> svc = SketchService(k=128, backend="scan")
-    >>> t0 = svc.submit(key0, A0, B0)
-    >>> t1 = svc.submit(key1, A1, B1)
-    >>> out = svc.flush()              # {ticket: SketchSummary}
-    >>> # or the full pipeline: sketch -> estimate, top-r factors per request
-    >>> fac = svc.flush_factors(r=5)   # {ticket: ServedEstimate}
+    Two request styles share the service:
+
+    * **one-shot**: ``submit(key, A, B)`` whole pairs, then ``flush()`` /
+      ``flush_factors(r)`` — batched micro-dispatch per shape bucket;
+    * **streaming sessions**: ``open_stream(key, d, n1, n2)`` then
+      ``append(sid, A_chunk, B_chunk)`` row chunks over time; ``query(sid)``
+      reads the live accumulator's summary at any point and
+      ``stream_factors(sid, r)`` runs the same estimation pipeline (and the
+      same per-request key derivation) ``flush_factors`` uses — appending a
+      pair chunk-by-chunk then querying equals submitting it whole
+      (bit-identical when the appended chunk size matches the service
+      ``block``; see docs/streaming.md).
+
+    >>> import jax
+    >>> key = jax.random.PRNGKey(0)
+    >>> A = jax.random.normal(key, (64, 6))
+    >>> B = jax.random.normal(jax.random.fold_in(key, 1), (64, 4))
+    >>> svc = SketchService(k=8, backend="scan", block=32)
+    >>> t0 = svc.submit(key, A, B)                 # one-shot request
+    >>> svc.flush()[t0].A_sketch.shape
+    (8, 6)
+    >>> sid = svc.open_stream(key, 64, 6, 4)       # streaming session
+    >>> svc.append(sid, A[:32], B[:32])
+    32
+    >>> svc.append(sid, A[32:], B[32:])
+    64
+    >>> svc.query(sid).A_sketch.shape              # live accumulator summary
+    (8, 6)
+    >>> est = svc.stream_factors(sid, r=2, m=64, T=2)
+    >>> est.factors.U.shape
+    (6, 2)
     """
 
     def __init__(self, k: int = 128, *, method: str = "gaussian",
@@ -97,6 +133,8 @@ class SketchService:
         self.precision = precision
         self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array]] = []
         self._next_ticket = 0
+        self._streams: Dict[int, _StreamSession] = {}
+        self._next_stream = 0
 
     def submit(self, key: jax.Array, A: jax.Array, B: jax.Array) -> int:
         """Queue one (A, B) pair under its own key; returns a ticket."""
@@ -174,6 +212,100 @@ class SketchService:
                     jax.tree.map(lambda x: x[i], summaries),
                     jax.tree.map(lambda x: x[i], ests.factors))
         return out
+
+    # -- streaming accumulator sessions ------------------------------------
+
+    def open_stream(self, key: jax.Array, d: int, n1: int, n2: int, *,
+                    state: Optional[StreamState] = None) -> int:
+        """Open a stateful accumulator session for a (d, n1, n2) stream.
+
+        The session inherits the service's ``k``/``method``/``precision``.
+        Pass ``state`` (e.g. restored via ``ckpt.checkpoint
+        .restore_stream_state``) to resume a previously checkpointed pass
+        instead of starting empty — it must match this session's shapes and
+        carry the same base key (the sketch randomness lives in the state;
+        a mismatched key would silently break the documented parity between
+        ``stream_factors`` and one-shot ``flush_factors``). Returns the
+        stream id.
+        """
+        summ = StreamingSummarizer(self.k, method=self.method,
+                                   precision=self.precision)
+        if state is None:
+            state = summ.init(key, (d, n1, n2))
+        else:
+            shapes = (state.A_acc.shape, state.B_acc.shape,
+                      int(state.d_total))
+            want = ((self.k, n1), (self.k, n2), d)
+            if shapes != want:
+                raise ValueError(
+                    f"resumed state does not match this session: state has "
+                    f"(A_acc, B_acc, d_total) = {shapes}, session needs "
+                    f"{want}")
+            if state.key is not None and not jnp.array_equal(
+                    jax.random.key_data(state.key)
+                    if jnp.issubdtype(state.key.dtype, jax.dtypes.prng_key)
+                    else state.key,
+                    jax.random.key_data(key)
+                    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+                    else key):
+                raise ValueError(
+                    "resumed state carries a different base key than the "
+                    "session key — sketch and estimation randomness would "
+                    "disagree; pass the key the pass was started with")
+            if (self.method == "srht") != (state.signs is not None):
+                raise ValueError(
+                    f"resumed state method does not match the service's "
+                    f"method={self.method!r}")
+        sid = self._next_stream
+        self._next_stream += 1
+        self._streams[sid] = _StreamSession(
+            key=key, summarizer=summ, state=state,
+            next_row=int(state.row_high), rows_seen=int(state.rows_seen))
+        return sid
+
+    def append(self, stream_id: int, A_chunk: jax.Array, B_chunk: jax.Array,
+               row_offset: Optional[int] = None) -> int:
+        """Absorb one row chunk into the live accumulator.
+
+        ``row_offset`` defaults to the session's cursor (contiguous
+        ingestion); pass it explicitly for out-of-order chunk arrival.
+        Returns total rows absorbed so far (a host-side count: appending
+        never blocks on the device, keeping async dispatch overlapped).
+        """
+        sess = self._streams[stream_id]
+        off = sess.next_row if row_offset is None else row_offset
+        sess.state = sess.summarizer.update(sess.state, A_chunk, B_chunk, off)
+        sess.next_row = max(sess.next_row, off + A_chunk.shape[0])
+        sess.rows_seen += A_chunk.shape[0]
+        return sess.rows_seen
+
+    def query(self, stream_id: int) -> SketchSummary:
+        """Finalized summary of the live accumulator (non-destructive: the
+        session keeps absorbing chunks afterwards)."""
+        sess = self._streams[stream_id]
+        return sess.summarizer.finalize(sess.state)
+
+    def stream_factors(self, stream_id: int, r: int, *,
+                       m: Optional[int] = None, T: int = 6,
+                       est_method: str = "rescaled_jl",
+                       est_backend: str = "jit",
+                       use_splits: bool = False) -> ServedEstimate:
+        """``flush_factors`` against the live accumulator: finalize the
+        session's state and run the estimation pipeline with the same
+        per-request key derivation (``fold_in(session key, 1)``) — a stream
+        fed chunk-by-chunk yields the same factors as the equivalent one-shot
+        ``submit`` + ``flush_factors`` request."""
+        sess = self._streams[stream_id]
+        summary = sess.summarizer.finalize(sess.state)
+        est = estimate_product(
+            jax.random.fold_in(sess.key, 1), summary, r,
+            method=est_method, backend=est_backend, m=m, T=T,
+            use_splits=use_splits)
+        return ServedEstimate(summary, est.factors)
+
+    def close_stream(self, stream_id: int) -> StreamState:
+        """Tear down a session; returns its final state (checkpointable)."""
+        return self._streams.pop(stream_id).state
 
 
 class ServedEstimate(NamedTuple):

@@ -33,9 +33,9 @@ from typing import Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import streaming
 from repro.core.smppca import smppca_from_summary
 from repro.core.summary_engine import tap_pair_summary
-from repro.core.types import SketchSummary
 
 
 class TapConfig(NamedTuple):
@@ -97,12 +97,43 @@ def _bwd(k, block, res, gy):
 sketched_dense.defvjp(_fwd, _bwd)
 
 
+def tap_state(tap_grads: Dict[str, jax.Array]) -> streaming.StreamState:
+    """View a tap-grads dict as a ``streaming.StreamState`` partial summary.
+
+    The taps ARE a stream state over token chunks: {a, b} are the running
+    sketches, {na2, nb2} the running *squared* norms — exactly the mergeable
+    accumulator layout (squared norms so the DP all-reduce stays a plain
+    sum). The Pi here is the tap path's own (fused, per-call) draw rather
+    than the per-global-row fold_in — token ids are not globally meaningful
+    across microbatches — so the state carries no key/plan; it can be merged
+    and finalized, not updated further.
+    """
+    na2 = jnp.maximum(tap_grads["na2"], 0.0)
+    nb2 = jnp.maximum(tap_grads["nb2"], 0.0)
+    return streaming.StreamState(
+        key=None, A_acc=tap_grads["a"], B_acc=tap_grads["b"],
+        na2=na2, nb2=nb2, rows_seen=jnp.zeros((), jnp.int32),
+        row_high=jnp.zeros((), jnp.int32),
+        d_total=jnp.asarray(-1, jnp.int32), signs=None, srows=None)
+
+
+def accumulate_taps(t1: Dict[str, jax.Array],
+                    t2: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Merge tap grads from two microbatches (gradient accumulation).
+
+    Delegates to ``streaming.merge_states`` — the same commutative monoid
+    the chunked ingestion and the distributed tree-reduce use, so
+    accumulate-then-decompress equals decompressing the concatenated-token
+    summary.
+    """
+    m = streaming.merge_states(tap_state(t1), tap_state(t2))
+    return {"a": m.A_acc, "b": m.B_acc, "na2": m.na2, "nb2": m.nb2}
+
+
 def decompress_tap(key: jax.Array, tap_grads: Dict[str, jax.Array],
                    cfg: TapConfig) -> jax.Array:
     """Same-seeded SMP-PCA completion of the tapped summary -> rank-r dW."""
-    summary = SketchSummary(tap_grads["a"], tap_grads["b"],
-                            jnp.sqrt(jnp.maximum(tap_grads["na2"], 0.0)),
-                            jnp.sqrt(jnp.maximum(tap_grads["nb2"], 0.0)))
+    summary = streaming.finalize_state(tap_state(tap_grads))
     n1, n2 = summary.n1, summary.n2
     m = int(cfg.sample_factor * (n1 + n2) * cfg.rank)
     res = smppca_from_summary(key, summary, r=cfg.rank, m=m, T=cfg.als_iters)

@@ -1,0 +1,41 @@
+"""Docs gate in tier-1: the docs/ subsystem exists, README links to it,
+every relative markdown link resolves, and the public-API doctest examples
+execute (the same checks the `docs` CI job runs via tools/check_docs.py)."""
+import importlib.util
+import os
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist_and_linked_from_readme():
+    readme = (REPO / "README.md").read_text()
+    for doc in ("docs/architecture.md", "docs/paper_map.md",
+                "docs/streaming.md"):
+        assert (REPO / doc).exists(), doc
+        assert doc in readme, f"README does not link {doc}"
+
+
+def test_markdown_links_resolve():
+    mod = _load_check_docs()
+    assert mod.check_links() == []
+
+
+def test_public_api_doctests():
+    mod = _load_check_docs()
+    assert mod.run_doctests() == 0
+
+
+def test_ci_has_docs_and_streaming_jobs():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "tools/check_docs.py" in ci
+    assert "--suite streaming" in ci
+    assert os.path.exists(REPO / "benchmarks" / "run.py")

@@ -1,0 +1,93 @@
+"""Docs gate: run public-API doctests + resolve README/docs relative links.
+
+    PYTHONPATH=src python tools/check_docs.py            # both checks
+    PYTHONPATH=src python tools/check_docs.py --links-only
+
+Doctests cover the public API surface (build_summary, estimate_product,
+SketchService, StreamingSummarizer) — the examples in those docstrings are
+executable documentation and this is what keeps them honest. The link check
+walks README.md and docs/**/*.md and fails on any relative link or image
+whose target does not exist (http(s)/mailto/anchor links are skipped).
+Run by the `docs` CI job and by tests/test_docs.py (links only).
+"""
+from __future__ import annotations
+
+import argparse
+import doctest
+import importlib
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOCTEST_MODULES = (
+    "repro.core.summary_engine",
+    "repro.core.estimation_engine",
+    "repro.core.streaming",
+    "repro.serve.engine",
+)
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_markdown_files():
+    """README.md plus every markdown file under docs/."""
+    yield os.path.join(REPO, "README.md")
+    docs = os.path.join(REPO, "docs")
+    for dirpath, _, files in os.walk(docs):
+        for f in sorted(files):
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check_links() -> list:
+    """All broken relative links as (file, target) pairs."""
+    broken = []
+    for md in iter_markdown_files():
+        with open(md) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                broken.append((os.path.relpath(md, REPO), target))
+    return broken
+
+
+def run_doctests() -> int:
+    """Total doctest failures across the public-API modules."""
+    failures = 0
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, verbose=False)
+        status = "ok" if result.failed == 0 else "FAIL"
+        print(f"doctest {name}: {result.attempted} examples, "
+              f"{result.failed} failures [{status}]", flush=True)
+        failures += result.failed
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip doctests (no jax import)")
+    args = ap.parse_args()
+
+    broken = check_links()
+    for md, target in broken:
+        print(f"BROKEN LINK {md}: {target}", flush=True)
+    n_md = len(list(iter_markdown_files()))
+    print(f"link check: {n_md} files, {len(broken)} broken", flush=True)
+
+    failures = 0 if args.links_only else run_doctests()
+    return 1 if (broken or failures) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
