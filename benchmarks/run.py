@@ -10,7 +10,10 @@ the two-pass LELA baseline — and writes machine-readable
 ``streaming_sweep`` — chunk-size x ingestion-mode cells (sequential /
 tree-merge / shuffled-rows StreamingSummarizer vs the one-shot backends)
 with parity errors — and writes ``BENCH_streaming.json``
-(``--out-streaming``); ``--smoke`` shrinks sizes for CI.
+(``--out-streaming``). ``--suite error`` runs the ``error_sweep`` —
+estimated-vs-true residual across rank x probe-count cells plus the
+``adaptive_rank`` tolerance sweep — and writes ``BENCH_error.json``
+(``--out-error``); ``--smoke`` shrinks sizes for CI.
 
 Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
 spectrum-matched synthetic stand-ins validate the paper's *relative* claims
@@ -449,6 +452,73 @@ def streaming_sweep(key, *, smoke: bool = False) -> dict:
     }
 
 
+def error_sweep(key, *, smoke: bool = False) -> dict:
+    """ErrorEngine sweep: estimated vs true residual across rank x probes.
+
+    One known-spectrum pair; for every probe count p the summary is rebuilt
+    (probes ride the same single pass) and for every rank r the full
+    ``estimate_product(..., with_error=True)`` pipeline runs — each cell
+    records the a-posteriori Frobenius estimate, the exact residual
+    (materialized here for validation only), their ratio, and the CI hit.
+    The final records sweep ``adaptive_rank`` tolerances: chosen rank +
+    whether the estimate met the gate. The acceptance gate reads the
+    ratios: every cell must sit within 2x of the truth.
+    """
+    if smoke:
+        d, n, k, T = 1024, 48, 64, 3
+        ranks, probe_counts, tols = (2, 4, 8), (8, 32), (0.5, 0.2)
+    else:
+        d, n, k, T = 8192, 192, 256, 6
+        ranks, probe_counts, tols = (2, 5, 10, 20), (4, 16, 64), (0.5, 0.2)
+    A, B = _gd_pair(key, d, n, corr=0.3, decay=0.8)
+    M = A.T @ B
+    m_frob = float(jnp.linalg.norm(M))
+    results = []
+    for p in probe_counts:
+        summary = core.build_summary(key, A, B, k, backend="scan", probes=p)
+        jax.block_until_ready(summary)
+        for r in ranks:
+            def run(r=r, summary=summary):
+                return core.estimate_product(
+                    jax.random.fold_in(key, 1), summary, r,
+                    m=int(6 * n * r * math.log(n)), T=T, with_error=True)
+            est, us = _timed(run)
+            true = float(jnp.linalg.norm(M - est.factors.dense()))
+            results.append({
+                "name": f"r{r}/p{p}",
+                "r": r, "probes": p, "us_per_call": us,
+                "frob_true": true,
+                "frob_est": float(est.error.frob_est),
+                "ratio_est_over_true": float(est.error.frob_est) / true,
+                "rel_est": float(est.error.rel_est),
+                "rel_true": true / m_frob,
+                "ci_covers_true": bool(float(est.error.frob_lo) <= true
+                                       <= float(est.error.frob_hi)),
+            })
+    adaptive = []
+    summary = core.build_summary(key, A, B, k, backend="scan",
+                                 probes=probe_counts[-1])
+    for tol in tols:
+        def run(tol=tol):
+            return core.adaptive_rank(summary, tol=tol, r_max=max(ranks))
+        res, us = _timed(run)
+        true = float(jnp.linalg.norm(M - res.factors.dense())) / m_frob
+        adaptive.append({"tol": tol, "r": res.r, "us_per_call": us,
+                         "rel_est": float(res.error.rel_est),
+                         "rel_true": true,
+                         "met": bool(res.error.rel_est <= tol)})
+    ratios = [rec["ratio_est_over_true"] for rec in results]
+    return {
+        "suite": "error",
+        "config": {"d": d, "n": n, "k": k, "T": T, "ranks": list(ranks),
+                   "probe_counts": list(probe_counts), "smoke": smoke,
+                   "backend_platform": jax.default_backend()},
+        "results": results,
+        "adaptive_rank": adaptive,
+        "worst_ratio": max(max(ratios), 1.0 / min(ratios)),
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -490,6 +560,25 @@ def run_estimation_suite(key, out_path: str, smoke: bool) -> None:
           f"{report['jit_speedup_vs_reference']:.2f}x", flush=True)
 
 
+def run_error_suite(key, out_path: str, smoke: bool) -> None:
+    report = error_sweep(jax.random.fold_in(
+        key, zlib.crc32(b"error") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,us_per_call,frob_est,frob_true,ratio,ci_covers_true")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['us_per_call']:.0f},"
+              f"{rec['frob_est']:.4f},{rec['frob_true']:.4f},"
+              f"{rec['ratio_est_over_true']:.3f},{rec['ci_covers_true']}",
+              flush=True)
+    for rec in report["adaptive_rank"]:
+        print(f"adaptive tol={rec['tol']},r={rec['r']},"
+              f"rel_est={rec['rel_est']:.3f},rel_true={rec['rel_true']:.3f},"
+              f"met={rec['met']}", flush=True)
+    print(f"worst_ratio,{report['worst_ratio']:.3f}", flush=True)
+
+
 def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
     report = streaming_sweep(jax.random.fold_in(
         key, zlib.crc32(b"streaming") % 2**31), smoke=smoke)
@@ -507,7 +596,8 @@ def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite",
-                   choices=("paper", "estimation", "streaming", "all"),
+                   choices=("paper", "estimation", "streaming", "error",
+                            "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
@@ -515,6 +605,8 @@ def main() -> None:
                    help="JSON artifact path for the estimation suite")
     p.add_argument("--out-streaming", default="BENCH_streaming.json",
                    help="JSON artifact path for the streaming suite")
+    p.add_argument("--out-error", default="BENCH_error.json",
+                   help="JSON artifact path for the error suite")
     args = p.parse_args()
     key = jax.random.PRNGKey(0)
     if args.suite in ("paper", "all"):
@@ -523,6 +615,8 @@ def main() -> None:
         run_estimation_suite(key, args.out, args.smoke)
     if args.suite in ("streaming", "all"):
         run_streaming_suite(key, args.out_streaming, args.smoke)
+    if args.suite in ("error", "all"):
+        run_error_suite(key, args.out_error, args.smoke)
 
 
 if __name__ == "__main__":

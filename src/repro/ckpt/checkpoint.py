@@ -130,6 +130,8 @@ def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
         "d_total": int(state.d_total),
         "k": int(state.A_acc.shape[0]),
         "srht": state.signs is not None,
+        "probes": (0 if state.probe_acc is None
+                   else int(state.probe_acc.shape[-1])),
     }
     meta.update(extra or {})
     return save(ckpt_dir, step, state, keep=keep, extra=meta)

@@ -3,6 +3,7 @@
 Public API:
     build_summary / rows_summary                          (step 1: the engine)
     estimate_product                                      (steps 2-3: the engine)
+    estimate_error / adaptive_rank / probe_omega          (quality: ErrorEngine)
     sketch_summary / sketch_pass / streamed_rows_summary  (step 1, legacy wrappers)
     sample_entries / q_probabilities                      (step 2a, Eq 1)
     rescaled_entries / rescaled_matrix                    (step 2b, Eq 2)
@@ -13,7 +14,11 @@ Public API:
     StreamingSummarizer / merge_states / finalize_state   (chunked ingestion)
 """
 from repro.core.types import (
-    EstimateResult, LowRankFactors, SampleSet, SketchSummary, SMPPCAResult)
+    ErrorEstimate, EstimateResult, LowRankFactors, SampleSet, SketchSummary,
+    SMPPCAResult)
+from repro.core.error_engine import (
+    AdaptiveRankResult, adaptive_rank, estimate_error, merge_probes,
+    probe_contribution, probe_omega, probe_pass)
 from repro.core.sketch import (
     column_norms, fwht, gaussian_pi, merge_summaries, pi_rows, sketch_pass,
     sketch_summary, srht_sketch, streamed_rows_summary)

@@ -106,6 +106,8 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
     key, signs, srows = state.key, state.signs, state.srows
     k = summarizer.k
 
+    omega = state.omega
+
     def _local_delta(A_loc, B_loc):
         idx = jax.lax.axis_index(axis)
         gids = row_offset + idx * shard_rows + jnp.arange(shard_rows)
@@ -114,17 +116,30 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
             key, signs, srows, A_loc, B_loc, gids, k=k,
             method=summarizer.method, precision=summarizer.precision)
         # the psum over shards IS the merge of the per-device partial states
-        return (jax.lax.psum(dA, axis), jax.lax.psum(dB, axis),
-                jax.lax.psum(dna2, axis), jax.lax.psum(dnb2, axis))
+        out = (jax.lax.psum(dA, axis), jax.lax.psum(dB, axis),
+               jax.lax.psum(dna2, axis), jax.lax.psum(dnb2, axis))
+        if omega is not None:
+            # the probe block is linear in the rows too: same one psum
+            from repro.core.error_engine import probe_contribution
+            dprobe = probe_contribution(omega, A_loc, B_loc,
+                                        summarizer.precision)
+            out = out + (jax.lax.psum(dprobe, axis),)
+        return out
 
+    out_specs = (P(None, None), P(None, None), P(None), P(None))
+    if omega is not None:
+        out_specs = out_specs + (P(None, None),)
     fn = shard_map(_local_delta, mesh=mesh,
                    in_specs=(P(axis, None), P(axis, None)),
-                   out_specs=(P(None, None), P(None, None), P(None), P(None)))
-    dA, dB, dna2, dnb2 = fn(A_slab, B_slab)
+                   out_specs=out_specs)
+    parts = fn(A_slab, B_slab)
+    dA, dB, dna2, dnb2 = parts[:4]
+    dprobe = parts[4] if omega is not None else None
     delta = StreamState(key=None, A_acc=dA, B_acc=dB, na2=dna2, nb2=dnb2,
                         rows_seen=jnp.asarray(slab_d, jnp.int32),
                         row_high=jnp.asarray(row_offset + slab_d, jnp.int32),
-                        d_total=state.d_total, signs=signs, srows=srows)
+                        d_total=state.d_total, signs=signs, srows=srows,
+                        omega=omega, probe_acc=dprobe)
     return merge_states(state, delta)
 
 
@@ -132,18 +147,22 @@ def distributed_streaming_summary(mesh: Mesh, axis: str, key: jax.Array,
                                   A: jax.Array, B: jax.Array, k: int,
                                   method: str = "gaussian",
                                   precision: str | None = None,
-                                  slab: int | None = None):
+                                  slab: int | None = None,
+                                  probes: int = 0):
     """Full streaming pass over row-sharded (A, B): slab-chunked ingestion +
     per-slab tree-merge. With ``slab=None`` the whole pair is one slab —
     semantically ``distributed_sketch_summary`` re-expressed through the
-    streaming monoid (parity-tested in tests/core/test_streaming.py)."""
+    streaming monoid (parity-tested in tests/core/test_streaming.py).
+    ``probes`` retains the held-out probe block (its per-shard contributions
+    merge through the same psum as the sketches)."""
     from repro.core.streaming import StreamingSummarizer
     d = A.shape[0]
     n_shards = mesh.shape[axis]
     if d % n_shards != 0:
         raise ValueError(f"row dim ({d}) must be a multiple of the mesh "
                          f"axis size ({n_shards})")
-    summ = StreamingSummarizer(k, method=method, precision=precision)
+    summ = StreamingSummarizer(k, method=method, precision=precision,
+                               probes=probes)
     state = summ.init(key, (d, A.shape[1], B.shape[1]))
     slab = d if slab is None else slab
     # round the slab to a shard multiple so every slab — including the

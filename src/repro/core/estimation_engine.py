@@ -259,8 +259,8 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
                      method: str = "rescaled_jl", backend: str = "jit",
                      m: Optional[int] = None, T: int = 10,
                      use_splits: bool = False,
-                     exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None
-                     ) -> EstimateResult:
+                     exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     with_error: bool = False) -> EstimateResult:
     """Rank-r factors of A^T B from a one-pass summary (Alg 1 steps 2-3).
 
     summary: any ``build_summary`` output — (k, n) sketches + exact column
@@ -277,6 +277,10 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
     m:       Omega sample budget; defaults to the paper's ~10 n r log n.
              Ignored by direct_svd.
     T:       WAltMin iteration pairs. use_splits: Alg-2 sample splitting.
+    with_error: attach the ErrorEngine's a-posteriori quality estimate
+             (``EstimateResult.error``) — works on every method x backend
+             cell, but needs a probe-carrying summary
+             (``build_summary(..., probes=p)``).
 
     >>> import jax, jax.numpy as jnp
     >>> from repro.core.summary_engine import build_summary
@@ -299,13 +303,17 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
             f"unknown estimation backend {backend!r} (use one of {BACKENDS})")
     fn = _REGISTRY[(method, backend)]
     batched = summary.A_sketch.ndim == 3
+    if with_error and summary.probes is None:
+        raise ValueError(
+            "with_error=True needs a probe-carrying summary — build it with "
+            "build_summary(..., probes=p) / StreamingSummarizer(probes=p)")
     if m is None:
         m = default_m(int(summary.A_sketch.shape[-1]),
                       int(summary.B_sketch.shape[-1]), r)
     kw = dict(m=m, T=T, use_splits=use_splits, exact_pair=exact_pair)
 
     if not batched:
-        return fn(key, summary, r, **kw)
+        return _maybe_error(fn(key, summary, r, **kw), summary, with_error)
 
     L = summary.A_sketch.shape[0]
     keys = key if _is_key_stack(key, L) else jax.random.split(key, L)
@@ -317,11 +325,24 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
                         (exact_pair[0][i], exact_pair[1][i]))
             outs.append(fn(keys[i], jax.tree.map(lambda x: x[i], summary),
                            r, **kw_i))
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-    if exact_pair is not None:
+        out = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    elif exact_pair is not None:
         A, B = exact_pair
-        return jax.vmap(
+        out = jax.vmap(
             lambda kk, s, a, b: fn(kk, s, r, m=m, T=T, use_splits=use_splits,
                                    exact_pair=(a, b))
         )(keys, summary, A, B)
-    return jax.vmap(lambda kk, s: fn(kk, s, r, **kw))(keys, summary)
+    else:
+        out = jax.vmap(lambda kk, s: fn(kk, s, r, **kw))(keys, summary)
+    return _maybe_error(out, summary, with_error, batched=True)
+
+
+def _maybe_error(result: EstimateResult, summary: SketchSummary,
+                 with_error: bool, *, batched: bool = False) -> EstimateResult:
+    """Attach the a-posteriori ErrorEstimate — one (possibly vmapped)
+    probe evaluation per result, uniform across every registry cell."""
+    if not with_error:
+        return result
+    from repro.core.error_engine import estimate_error
+    fn = jax.vmap(estimate_error) if batched else estimate_error
+    return result._replace(error=fn(summary, result.factors))

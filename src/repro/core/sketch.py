@@ -132,10 +132,17 @@ def streamed_rows_summary(key: jax.Array, row_idx: jax.Array,
 
 
 def merge_summaries(a: SketchSummary, b: SketchSummary) -> SketchSummary:
-    """Combine summaries of disjoint row shards (Spark treeAggregate combiner)."""
+    """Combine summaries of disjoint row shards (Spark treeAggregate combiner).
+
+    Probe blocks (when retained) merge as a plain sum — they are linear in
+    the rows like the sketches; the shared test matrix is carried from ``a``
+    (both operands must descend from the same key)."""
+    from repro.core.error_engine import merge_probes
     return SketchSummary(
         a.A_sketch + b.A_sketch,
         a.B_sketch + b.B_sketch,
         jnp.sqrt(a.norm_A ** 2 + b.norm_A ** 2),
         jnp.sqrt(a.norm_B ** 2 + b.norm_B ** 2),
+        probes=merge_probes(a.probes, b.probes),
+        probe_omega=a.probe_omega,
     )

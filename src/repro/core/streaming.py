@@ -11,10 +11,11 @@ algorithms for low-rank matrix approximation"):
     merge(s1, s2)                           -> StreamState   (associative +)
     finalize(state)                         -> SketchSummary (sqrt the norms)
 
-Because every accumulator field (sketches and *squared* column norms) is
-linear in the data rows, ``StreamState`` is a commutative monoid under
-``merge``: chunked ingestion, any merge order, and the one-shot
-``build_summary`` backends all produce the same summary. The randomness
+Because every accumulator field (sketches, *squared* column norms, and the
+optional held-out probe block ``(A^T B) @ Omega``) is linear in the data
+rows, ``StreamState`` is a commutative monoid under ``merge``: chunked
+ingestion, any merge order, and the one-shot ``build_summary`` backends all
+produce the same summary. The randomness
 contract is the SummaryEngine's: the projection column for global row ``i``
 is a pure function of ``(key, i)`` (gaussian ``fold_in``; SRHT via the
 popcount Hadamard identity from one ``srht_plan``), so a chunk's
@@ -89,11 +90,18 @@ class StreamState(NamedTuple):
     d_total: jax.Array             # () int32 global streamed dim (-1: unknown)
     signs: Optional[jax.Array]     # (d,) SRHT rademacher signs, else None
     srows: Optional[jax.Array]     # (k,) SRHT sampled Hadamard rows, else None
+    omega: Optional[jax.Array] = None      # (n2, p) held-out probes, else None
+    probe_acc: Optional[jax.Array] = None  # (n1, p) running (A^T B) @ omega
 
     @property
     def k(self) -> int:
         """Sketch size."""
         return self.A_acc.shape[0]
+
+    @property
+    def n_probes(self) -> int:
+        """Held-out probe count p (0 when no probe block is carried)."""
+        return 0 if self.probe_acc is None else self.probe_acc.shape[-1]
 
 
 def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
@@ -105,6 +113,9 @@ def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
             f"{s2.A_acc.shape}/{s2.B_acc.shape}")
     if (s1.signs is None) != (s2.signs is None):
         raise ValueError("cannot merge gaussian and srht stream states")
+    if (s1.probe_acc is None) != (s2.probe_acc is None):
+        raise ValueError("cannot merge a probe-carrying stream state with a "
+                         "probe-free one (init both with the same probes=)")
 
 
 def _check_row_bounds(state: StreamState, lo: int, hi: int) -> None:
@@ -138,7 +149,9 @@ def merge_states(s1: StreamState, s2: StreamState) -> StreamState:
         na2=s1.na2 + s2.na2,
         nb2=s1.nb2 + s2.nb2,
         rows_seen=s1.rows_seen + s2.rows_seen,
-        row_high=jnp.maximum(s1.row_high, s2.row_high))
+        row_high=jnp.maximum(s1.row_high, s2.row_high),
+        probe_acc=(None if s1.probe_acc is None
+                   else s1.probe_acc + s2.probe_acc))
 
 
 def tree_merge(states: Sequence[StreamState]) -> StreamState:
@@ -157,9 +170,11 @@ def tree_merge(states: Sequence[StreamState]) -> StreamState:
 
 
 def finalize_state(state: StreamState) -> SketchSummary:
-    """StreamState -> the Step-1 ``SketchSummary`` (sqrt the squared norms)."""
+    """StreamState -> the Step-1 ``SketchSummary`` (sqrt the squared norms;
+    the probe block and its test matrix ride along when carried)."""
     return SketchSummary(state.A_acc, state.B_acc,
-                         jnp.sqrt(state.na2), jnp.sqrt(state.nb2))
+                         jnp.sqrt(state.na2), jnp.sqrt(state.nb2),
+                         probes=state.probe_acc, probe_omega=state.omega)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "method", "precision"))
@@ -177,6 +192,14 @@ def _chunk_contribution(key, signs, srows, A_chunk, B_chunk, gids, *,
             _sketch_dot(P, Bc, precision),
             jnp.sum(Ac.astype(jnp.float32) ** 2, axis=0),
             jnp.sum(Bc.astype(jnp.float32) ** 2, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _probe_chunk(omega, A_chunk, B_chunk, *, precision: Optional[str]):
+    """(n1, p) probe delta for one chunk — the exact float ops of the
+    one-shot ``error_engine.probe_pass`` scan body (bit-parity contract)."""
+    from repro.core.error_engine import probe_contribution
+    return probe_contribution(omega, A_chunk, B_chunk, precision)
 
 
 class StreamingSummarizer:
@@ -203,13 +226,14 @@ class StreamingSummarizer:
     """
 
     def __init__(self, k: int, *, method: str = "gaussian",
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None, probes: int = 0):
         if method not in METHODS:
             raise ValueError(
                 f"unknown sketch method {method!r} (use {METHODS})")
         self.k = k
         self.method = method
         self.precision = precision
+        self.probes = probes
 
     # -- contract ----------------------------------------------------------
 
@@ -226,6 +250,12 @@ class StreamingSummarizer:
             signs, srows, _ = srht_plan(key, d, self.k)
         else:
             signs = srows = None
+        if self.probes:
+            from repro.core.error_engine import probe_omega
+            omega = probe_omega(key, n2, self.probes)
+            probe_acc = jnp.zeros((n1, self.probes), jnp.float32)
+        else:
+            omega = probe_acc = None
         return StreamState(
             key=key,
             A_acc=jnp.zeros((self.k, n1), jnp.float32),
@@ -235,7 +265,7 @@ class StreamingSummarizer:
             rows_seen=jnp.zeros((), jnp.int32),
             row_high=jnp.zeros((), jnp.int32),
             d_total=jnp.asarray(d, jnp.int32),
-            signs=signs, srows=srows)
+            signs=signs, srows=srows, omega=omega, probe_acc=probe_acc)
 
     def update(self, state: StreamState, A_chunk: jax.Array,
                B_chunk: jax.Array, row_offset) -> StreamState:
@@ -318,9 +348,14 @@ class StreamingSummarizer:
         dA, dB, dna2, dnb2 = _chunk_contribution(
             state.key, state.signs, state.srows, A_chunk, B_chunk, gids,
             k=self.k, method=self.method, precision=self.precision)
+        probe_acc = state.probe_acc
+        if state.omega is not None:
+            probe_acc = probe_acc + _probe_chunk(
+                state.omega, A_chunk, B_chunk, precision=self.precision)
         return state._replace(
             A_acc=state.A_acc + dA, B_acc=state.B_acc + dB,
             na2=state.na2 + dna2, nb2=state.nb2 + dnb2,
             rows_seen=state.rows_seen + jnp.int32(t),
             row_high=jnp.maximum(state.row_high,
-                                 jnp.asarray(hi1, jnp.int32)))
+                                 jnp.asarray(hi1, jnp.int32)),
+            probe_acc=probe_acc)

@@ -325,7 +325,8 @@ def _is_key_stack(key, L: int) -> bool:
 def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
                   method: str = "gaussian", backend: str = "reference",
                   block: int = 1024, precision: Optional[str] = None,
-                  mesh=None, axis: Optional[str] = None) -> SketchSummary:
+                  probes: int = 0, mesh=None,
+                  axis: Optional[str] = None) -> SketchSummary:
     """One-pass summary of (A, B): sketches (k, n) + exact column norms.
 
     A: (d, n1), B: (d, n2) — or stacked (L, d, n1)/(L, d, n2) for the batched
@@ -337,6 +338,11 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
              across backends, so outputs agree to float reassociation.
     block:   row-block size for the scan backend.
     precision: None/'f32' | 'bf16' (bf16 inputs, f32 accumulation).
+    probes:  retain this many held-out probe columns ``(A^T B) @ Omega``
+             alongside the sketches (same single pass over the rows; the
+             probe stage is backend-independent, so the probe block is
+             bit-identical across backends for a fixed ``block``). Powers
+             the ErrorEngine's ``estimate_error``/``adaptive_rank``.
     mesh/axis: required for backend='distributed' (rows sharded over axis).
 
     >>> import jax, jax.numpy as jnp
@@ -369,8 +375,19 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
                 "batched mode is not supported for backend='distributed'")
         L = A.shape[0]
         keys = key if _is_key_stack(key, L) else jax.random.split(key, L)
-        return jax.vmap(lambda kk, a, b: fn(kk, a, b, k, **kw))(keys, A, B)
-    return fn(key, A, B, k, **kw)
+        out = jax.vmap(lambda kk, a, b: fn(kk, a, b, k, **kw))(keys, A, B)
+        if probes:
+            from repro.core import error_engine
+            out = jax.vmap(lambda kk, a, b, s: error_engine.attach_probes(
+                s, kk, a, b, probes, block=block, precision=precision)
+            )(keys, A, B, out)
+        return out
+    out = fn(key, A, B, k, **kw)
+    if probes:
+        from repro.core import error_engine
+        out = error_engine.attach_probes(out, key, A, B, probes, block=block,
+                                         precision=precision)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -16,12 +16,21 @@ class SketchSummary(NamedTuple):
 
     A: (d, n1), B: (d, n2); sketches are (k, n1)/(k, n2). Column norms are the
     paper's *side information* that powers the rescaled JL estimator.
+
+    ``probes``/``probe_omega`` are the optional held-out probe block (the
+    ErrorEngine's a-posteriori quality side information, Tropp et al.
+    1609.00048): ``probes = (A^T B) @ probe_omega`` accumulated in the same
+    single pass, ``probe_omega`` the (n2, p) Gaussian test matrix derived
+    from the sketch key. Both are None when the summary was built without
+    probes (``build_summary(..., probes=0)``, the default).
     """
 
     A_sketch: jax.Array        # (k, n1) = Pi @ A
     B_sketch: jax.Array        # (k, n2) = Pi @ B
     norm_A: jax.Array          # (n1,)  exact column L2 norms of A
     norm_B: jax.Array          # (n2,)  exact column L2 norms of B
+    probes: Optional[jax.Array] = None       # (n1, p) = A^T (B @ probe_omega)
+    probe_omega: Optional[jax.Array] = None  # (n2, p) held-out Gaussian probes
 
     @property
     def k(self) -> int:
@@ -47,6 +56,11 @@ class SketchSummary(NamedTuple):
     def frob_B(self) -> jax.Array:
         """Frobenius norm of B (from the retained column norms)."""
         return jnp.sqrt(jnp.sum(self.norm_B ** 2))
+
+    @property
+    def n_probes(self) -> int:
+        """Held-out probe count p (0 when no probe block was retained)."""
+        return 0 if self.probes is None else self.probes.shape[-1]
 
 
 class SampleSet(NamedTuple):
@@ -84,18 +98,41 @@ class LowRankFactors(NamedTuple):
         return self.U @ self.V.T
 
 
+class ErrorEstimate(NamedTuple):
+    """A-posteriori quality estimate of rank-r factors (ErrorEngine output).
+
+    All statistics come from the p held-out probe columns retained in the
+    summary: each probe gives one unbiased sample of the squared Frobenius
+    residual ``||A^T B - U V^T||_F^2``, and the fields below are the sample
+    mean, a normal-approximation confidence interval over the p samples, a
+    spectral-norm proxy, and the residual relative to the estimated
+    ``||A^T B||_F``. Every field is a scalar array, so the estimate vmaps
+    across batched (L, ...) results.
+    """
+
+    frob_est: jax.Array       # sqrt of the unbiased mean squared residual
+    frob_sq_est: jax.Array    # unbiased estimate of ||A^T B - U V^T||_F^2
+    frob_lo: jax.Array        # lower confidence bound on the Frobenius residual
+    frob_hi: jax.Array        # upper confidence bound on the Frobenius residual
+    spectral_est: jax.Array   # max_j ||R w_j|| / ||w_j|| — spectral-norm proxy
+    rel_est: jax.Array        # frob_est / estimated ||A^T B||_F
+
+
 class EstimateResult(NamedTuple):
     """Step-2/3 output of the EstimationEngine (``estimate_product``).
 
     ``samples``/``values`` carry the Omega sample and the estimated entries
     for the completion methods; both are None for ``method='direct_svd'``
-    (which never samples). None fields are empty pytree nodes, so the result
-    stays jit/vmap friendly across methods.
+    (which never samples). ``error`` is the ErrorEngine's a-posteriori
+    quality estimate, filled only by ``estimate_product(..., with_error=
+    True)`` on probe-carrying summaries. None fields are empty pytree nodes,
+    so the result stays jit/vmap friendly across methods.
     """
 
     factors: LowRankFactors
     samples: Optional[SampleSet]
     values: Optional[jax.Array]   # (m,) estimated entries on Omega
+    error: Optional[ErrorEstimate] = None
 
 
 class SMPPCAResult(NamedTuple):

@@ -47,10 +47,19 @@ def sampled_rescaled_dot(As_rows: jax.Array, Bs_rows: jax.Array,
                          norm_A: jax.Array, norm_B: jax.Array,
                          rows: jax.Array, cols: jax.Array, *,
                          interpret: bool = True) -> jax.Array:
-    """As_rows: (n1, k), Bs_rows: (n2, k), rows/cols: (m,) int32 -> (m,) f32."""
+    """As_rows: (n1, k), Bs_rows: (n2, k), rows/cols: (m,) int32 -> (m,) f32.
+
+    ``m`` is the static sample budget: any m >= 0 works, including m = 0
+    (an empty Omega — no grid to launch, return the empty result directly;
+    a zero-size grid would slice zero-size operands) and m > n1 * n2 (more
+    samples than distinct entries — duplicates gather the same sketch rows,
+    each grid step is independent).
+    """
     m = rows.shape[0]
     k = As_rows.shape[1]
     n1, n2 = As_rows.shape[0], Bs_rows.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

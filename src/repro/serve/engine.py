@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.estimation_engine import estimate_product
 from repro.core.streaming import StreamingSummarizer, StreamState
 from repro.core.summary_engine import build_summary
-from repro.core.types import LowRankFactors, SketchSummary
+from repro.core.types import ErrorEstimate, LowRankFactors, SketchSummary
 from repro.models.factory import Model
 
 
@@ -125,12 +125,13 @@ class SketchService:
 
     def __init__(self, k: int = 128, *, method: str = "gaussian",
                  backend: str = "scan", block: int = 1024,
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None, probes: int = 0):
         self.k = k
         self.method = method
         self.backend = backend
         self.block = block
         self.precision = precision
+        self.probes = probes
         self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array]] = []
         self._next_ticket = 0
         self._streams: Dict[int, _StreamSession] = {}
@@ -171,7 +172,7 @@ class SketchService:
         B = jnp.stack([req[3] for req in requests])
         summaries = build_summary(
             keys, A, B, self.k, method=self.method, backend=self.backend,
-            block=self.block, precision=self.precision)
+            block=self.block, precision=self.precision, probes=self.probes)
         return tickets, keys, A, B, summaries
 
     def flush(self) -> Dict[int, SketchSummary]:
@@ -183,14 +184,25 @@ class SketchService:
                 out[ticket] = jax.tree.map(lambda x: x[i], batched)
         return out
 
-    def flush_factors(self, r: int, *, m: Optional[int] = None, T: int = 6,
-                      est_method: str = "rescaled_jl",
-                      est_backend: str = "jit",
-                      use_splits: bool = False) -> Dict[int, "ServedEstimate"]:
+    def flush_factors(self, r=None, *, tol: Optional[float] = None,
+                      r_max: Optional[int] = None, m: Optional[int] = None,
+                      T: int = 6, est_method: str = "rescaled_jl",
+                      est_backend: str = "jit", use_splits: bool = False,
+                      with_error: bool = False) -> Dict[int, "ServedEstimate"]:
         """The sketch->estimate pipeline: per shape bucket, one batched
         ``build_summary`` dispatch feeds one batched ``estimate_product``
         dispatch, and each request gets the top-r factors of its A^T B
         (plus the summary, for callers that also want the side information).
+
+        Rank selection is either fixed (``r=<int>``) or quality-gated:
+        ``r='auto'`` with ``tol=<relative Frobenius error>`` starts each
+        bucket at a small rank and escalates (doubling, one batched dispatch
+        per escalation) until every request's a-posteriori error estimate
+        meets ``tol`` or ``r_max`` is reached — the knob that lets callers
+        trade rank for error instead of guessing. Quality-gated (and
+        ``with_error=True``) serving needs a probe-carrying service
+        (``SketchService(probes=p)``); each ``ServedEstimate.error`` then
+        reports the ErrorEngine estimate the gate used.
 
         Each request's estimation key is ``fold_in(request key, 1)`` — a
         fixed derivation from the key the caller submitted, so results are
@@ -198,20 +210,59 @@ class SketchService:
         ``est_method='lela_waltmin'`` stacks the queued (A, B) pairs as the
         exact second pass (the service holds them anyway while queueing).
         """
+        gated = self._check_gate(r, tol, with_error)
         out: Dict[int, ServedEstimate] = {}
         for requests in self._drain_buckets().values():
             tickets, keys, A, B, summaries = self._stack_and_sketch(requests)
             est_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys)
             exact = (A, B) if est_method == "lela_waltmin" else None
-            ests = estimate_product(
-                est_keys, summaries, r, method=est_method,
-                backend=est_backend, m=m, T=T, use_splits=use_splits,
-                exact_pair=exact)
+            kw = dict(method=est_method, backend=est_backend, m=m, T=T,
+                      use_splits=use_splits, exact_pair=exact)
+            if gated:
+                ests = self._escalate(est_keys, summaries, tol, r_max, **kw)
+            else:
+                ests = estimate_product(est_keys, summaries, r,
+                                        with_error=with_error, **kw)
             for i, ticket in enumerate(tickets):
                 out[ticket] = ServedEstimate(
                     jax.tree.map(lambda x: x[i], summaries),
-                    jax.tree.map(lambda x: x[i], ests.factors))
+                    jax.tree.map(lambda x: x[i], ests.factors),
+                    error=(None if ests.error is None else
+                           jax.tree.map(lambda x: x[i], ests.error)))
         return out
+
+    def _check_gate(self, r, tol, with_error) -> bool:
+        """Validate a rank-selection request; True when quality-gated
+        (``r='auto'``/tol-driven) — ONE rulebook for flush_factors and
+        stream_factors."""
+        gated = (r == "auto" or (r is None and tol is not None))
+        if gated and tol is None:
+            raise ValueError("r='auto' needs tol= (the relative-error gate)")
+        if not gated and not isinstance(r, int):
+            raise ValueError(f"r must be an int or 'auto', got {r!r}")
+        if (gated or with_error) and self.probes <= 0:
+            raise ValueError(
+                "quality-gated/with_error serving needs a probe-carrying "
+                "service — construct SketchService(probes=p)")
+        return gated
+
+    def _escalate(self, est_keys, summaries, tol: float,
+                  r_max: Optional[int], **kw):
+        """Escalate the bucket's rank (doubling; one batched dispatch per
+        round) until every request's estimated relative error meets ``tol``
+        or ``r_max`` is hit — the estimate is re-read per round from the same
+        probe block, never from a fresh pass over the data."""
+        n1 = int(summaries.A_sketch.shape[-1])
+        n2 = int(summaries.B_sketch.shape[-1])
+        cap = min(n1, n2, self.k)
+        r_cap = cap if r_max is None else min(r_max, cap)
+        r = min(4, r_cap)
+        while True:
+            ests = estimate_product(est_keys, summaries, r, with_error=True,
+                                    **kw)
+            if float(jnp.max(ests.error.rel_est)) <= tol or r >= r_cap:
+                return ests
+            r = min(2 * r, r_cap)
 
     # -- streaming accumulator sessions ------------------------------------
 
@@ -229,7 +280,8 @@ class SketchService:
         stream id.
         """
         summ = StreamingSummarizer(self.k, method=self.method,
-                                   precision=self.precision)
+                                   precision=self.precision,
+                                   probes=self.probes)
         if state is None:
             state = summ.init(key, (d, n1, n2))
         else:
@@ -241,6 +293,12 @@ class SketchService:
                     f"resumed state does not match this session: state has "
                     f"(A_acc, B_acc, d_total) = {shapes}, session needs "
                     f"{want}")
+            if state.n_probes != self.probes:
+                raise ValueError(
+                    f"resumed state carries {state.n_probes} probe columns "
+                    f"but the service is configured with probes="
+                    f"{self.probes} — probe blocks cannot be grown or "
+                    f"dropped mid-pass")
             if state.key is not None and not jnp.array_equal(
                     jax.random.key_data(state.key)
                     if jnp.issubdtype(state.key.dtype, jax.dtypes.prng_key)
@@ -285,23 +343,34 @@ class SketchService:
         sess = self._streams[stream_id]
         return sess.summarizer.finalize(sess.state)
 
-    def stream_factors(self, stream_id: int, r: int, *,
+    def stream_factors(self, stream_id: int, r=None, *,
+                       tol: Optional[float] = None,
+                       r_max: Optional[int] = None,
                        m: Optional[int] = None, T: int = 6,
                        est_method: str = "rescaled_jl",
                        est_backend: str = "jit",
-                       use_splits: bool = False) -> ServedEstimate:
+                       use_splits: bool = False,
+                       with_error: bool = False) -> ServedEstimate:
         """``flush_factors`` against the live accumulator: finalize the
         session's state and run the estimation pipeline with the same
         per-request key derivation (``fold_in(session key, 1)``) — a stream
         fed chunk-by-chunk yields the same factors as the equivalent one-shot
-        ``submit`` + ``flush_factors`` request."""
+        ``submit`` + ``flush_factors`` request. The same quality-gated mode
+        is available: ``r='auto'`` with ``tol=`` escalates this session's
+        rank until its a-posteriori estimate passes (needs
+        ``SketchService(probes=p)``)."""
+        gated = self._check_gate(r, tol, with_error)
         sess = self._streams[stream_id]
         summary = sess.summarizer.finalize(sess.state)
-        est = estimate_product(
-            jax.random.fold_in(sess.key, 1), summary, r,
-            method=est_method, backend=est_backend, m=m, T=T,
-            use_splits=use_splits)
-        return ServedEstimate(summary, est.factors)
+        est_key = jax.random.fold_in(sess.key, 1)
+        kw = dict(method=est_method, backend=est_backend, m=m, T=T,
+                  use_splits=use_splits)
+        if gated:
+            est = self._escalate(est_key, summary, tol, r_max, **kw)
+        else:
+            est = estimate_product(est_key, summary, r,
+                                   with_error=with_error, **kw)
+        return ServedEstimate(summary, est.factors, error=est.error)
 
     def close_stream(self, stream_id: int) -> StreamState:
         """Tear down a session; returns its final state (checkpointable)."""
@@ -309,6 +378,9 @@ class SketchService:
 
 
 class ServedEstimate(NamedTuple):
-    """One serviced request: the step-1 summary and the step-2/3 factors."""
+    """One serviced request: the step-1 summary, the step-2/3 factors, and
+    (for probe-carrying services with ``with_error``/quality-gated modes)
+    the a-posteriori ErrorEngine estimate the rank gate read."""
     summary: SketchSummary
     factors: LowRankFactors
+    error: Optional[ErrorEstimate] = None

@@ -30,3 +30,51 @@ def planted_pair(key, d, n, decay=1.0, corr=None):
     else:
         B = A + corr * jax.random.normal(kB, (d, n)) @ D
     return A, B
+
+
+def gaussian_pair(key, d=192, n1=11, n2=7):
+    """Plain iid-normal (A, B) — the generic parity/monoid test input
+    (shared here; previously inlined per test module)."""
+    kA, kB = jax.random.split(key)
+    return (jax.random.normal(kA, (d, n1)), jax.random.normal(kB, (d, n2)))
+
+
+def spectrum_values(kind, q=10):
+    """Named singular-value profiles for the known-spectrum fixtures."""
+    i = np.arange(q, dtype=np.float64)
+    if kind == "fast":                 # geometric decay: clear rank gaps
+        s = 2.0 ** -i
+    elif kind == "slow":               # polynomial decay: heavy tail
+        s = 1.0 / np.sqrt(1.0 + i)
+    elif kind == "rank_deficient":     # exact rank q//2: zero tail
+        s = np.where(i < q // 2, 2.0 ** -i, 0.0)
+    else:
+        raise ValueError(f"unknown spectrum kind {kind!r}")
+    return jnp.asarray(s, jnp.float32)
+
+
+def known_spectrum_pair(key, d, n1, n2, spectrum):
+    """(A, B, M) with A^T B == M == U0 diag(spectrum) V0^T *exactly*.
+
+    A = W (orthonormal columns), B = W @ M, so A^T B = M and M's singular
+    values are the given spectrum — the ground truth every ErrorEngine /
+    adaptive-rank assertion compares against.
+    """
+    q = spectrum.shape[0]
+    assert q <= min(n1, n2), (q, n1, n2)
+    kW, kU, kV = jax.random.split(key, 3)
+    W, _ = jnp.linalg.qr(jax.random.normal(kW, (d, n1)))
+    U0, _ = jnp.linalg.qr(jax.random.normal(kU, (n1, q)))
+    V0, _ = jnp.linalg.qr(jax.random.normal(kV, (n2, q)))
+    M = (U0 * spectrum[None, :]) @ V0.T
+    return W, W @ M, M
+
+
+@pytest.fixture(params=["fast", "slow", "rank_deficient"])
+def spectrum_case(request, key):
+    """(kind, A, B, M, spectrum) across the three known-spectrum profiles:
+    fast decay, slow decay, and exactly rank-deficient."""
+    kind = request.param
+    s = spectrum_values(kind)
+    A, B, M = known_spectrum_pair(key, 384, 14, 12, s)
+    return kind, A, B, M, s

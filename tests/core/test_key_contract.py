@@ -1,0 +1,165 @@
+"""Golden key-derivation regression tests.
+
+The last PRs promised a bit-for-bit randomness contract: every engine
+derives its PRNG keys from the caller's base key through FIXED fold_in/split
+trees (documented in docs/architecture.md "Where the randomness lives").
+These tests freeze that tree as hard-coded uint32 key data for
+``PRNGKey(0)`` — a refactor that silently moves a split or fold_in now fails
+here instead of invisibly invalidating every reproducibility claim.
+
+Golden values were recorded from the jax threefry2x32 PRNG (the default;
+stable across jax versions by design). Each test ALSO checks the public
+entry point consumes the derived key (composition equality), so the goldens
+pin behavior, not just documentation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import estimation_engine, summary_engine
+from repro.core.error_engine import probe_key, probe_omega
+
+KEY0 = [0, 0]                     # PRNGKey(0) raw key data
+
+# split(PRNGKey(0), 3) — smppca's (k_sketch, k_sample, k_als) layout
+SMPPCA_SPLIT3 = [[2467461003, 428148500],
+                 [3186719485, 3840466878],
+                 [2562233961, 1946702221]]
+# fold_in(k_sample, 0) — the key smppca hands to estimate_product
+SMPPCA_EST_KEY = [3085582442, 3617870444]
+# split(SMPPCA_EST_KEY) — estimation's (sample key, ALS key)
+EST_SPLIT2 = [[3818717833, 1612203793], [166711035, 3635324495]]
+
+# fold_in(PRNGKey(0), i) — the per-row gaussian projection keys
+ROW_KEYS = {0: [1797259609, 2579123966],
+            1: [928981903, 3453687069],
+            5: [1524306142, 1887795613]}
+
+# split(PRNGKey(0)) — srht_plan's (sign key, row-sample key); sketch_svd and
+# estimate_product share the same single split of their own base key
+SPLIT2 = [[4146024105, 967050713], [2718843009, 1272950319]]
+
+# fold_in(PRNGKey(0), 1) — SketchService's per-request estimation key
+SERVICE_EST_KEY = [928981903, 3453687069]
+
+# fold_in(fold_in(PRNGKey(0), 0x70726F62), 0x6521) — the ErrorEngine's
+# reserved two-level probe fold ("prob", "e!")
+PROBE_KEY = [3361526193, 307077598]
+
+
+def _eq(got_key, want):
+    np.testing.assert_array_equal(np.asarray(got_key, np.uint32),
+                                  np.asarray(want, np.uint32))
+
+
+def test_base_key_layout(key):
+    _eq(key, KEY0)
+    _eq(jax.random.split(key, 3), SMPPCA_SPLIT3)
+    _eq(jax.random.split(key), SPLIT2)
+
+
+def test_row_projection_key_tree(key):
+    """projection_rows row i == normal(fold_in(key, i))/sqrt(k), with the
+    fold_in values frozen bit-for-bit."""
+    for i, kd in ROW_KEYS.items():
+        _eq(jax.random.fold_in(key, i), kd)
+        got = summary_engine.projection_rows(key, jnp.array([i]), 8)[0]
+        want = jax.random.normal(jnp.asarray(kd, jnp.uint32),
+                                 (8,)) / jnp.sqrt(8.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_srht_plan_key_tree(key):
+    """srht_plan = (rademacher(sign key), choice(row key)) with the single
+    split frozen."""
+    signs, rows, dp = summary_engine.srht_plan(key, 48, 16)
+    k_sign, k_rows = (jnp.asarray(k, jnp.uint32) for k in SPLIT2)
+    np.testing.assert_array_equal(
+        np.asarray(signs),
+        np.asarray(jax.random.rademacher(k_sign, (48,), dtype=jnp.float32)))
+    np.testing.assert_array_equal(
+        np.asarray(rows),
+        np.asarray(jax.random.choice(k_rows, dp, (16,), replace=False)))
+
+
+def test_smppca_key_tree(key):
+    """smppca == build_summary(k_sketch) + estimate_product(fold_in(
+    k_sample, 0)) with every derived key frozen."""
+    _eq(jax.random.fold_in(jnp.asarray(SMPPCA_SPLIT3[1], jnp.uint32), 0),
+        SMPPCA_EST_KEY)
+    _eq(jax.random.split(jnp.asarray(SMPPCA_EST_KEY, jnp.uint32)),
+        EST_SPLIT2)
+    A = jax.random.normal(key, (96, 10))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (96, 8))
+    res = core.smppca(key, A, B, r=2, k=16, m=200, T=2)
+    summary = summary_engine.build_summary(
+        jnp.asarray(SMPPCA_SPLIT3[0], jnp.uint32), A, B, 16)
+    manual = estimation_engine.estimate_product(
+        jnp.asarray(SMPPCA_EST_KEY, jnp.uint32), summary, 2, m=200, T=2)
+    np.testing.assert_array_equal(np.asarray(res.factors.U),
+                                  np.asarray(manual.factors.U))
+    np.testing.assert_array_equal(np.asarray(res.samples.rows),
+                                  np.asarray(manual.samples.rows))
+
+
+def test_lela_key_tree(key):
+    """lela passes the caller key straight to estimate_product (whose single
+    split is frozen above): composition equality, no hidden folds."""
+    A = jax.random.normal(key, (96, 10))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (96, 8))
+    got = core.lela(key, A, B, r=2, m=200, T=2)
+    manual = estimation_engine.estimate_product(
+        key, core.norms_only_summary(A, B), 2, method="lela_waltmin",
+        m=200, T=2, exact_pair=(A, B))
+    np.testing.assert_array_equal(np.asarray(got.U),
+                                  np.asarray(manual.factors.U))
+
+
+def test_sketch_svd_key_tree(key):
+    """sketch_svd == build_summary(split[0]) + direct_svd(split[1]) with the
+    split frozen."""
+    A = jax.random.normal(key, (96, 10))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (96, 8))
+    got = core.sketch_svd(key, A, B, r=2, k=16)
+    k_sketch, k_pow = (jnp.asarray(k, jnp.uint32) for k in SPLIT2)
+    summary = summary_engine.build_summary(k_sketch, A, B, 16)
+    manual = estimation_engine.estimate_product(
+        k_pow, summary, 2, method="direct_svd")
+    np.testing.assert_array_equal(np.asarray(got.U),
+                                  np.asarray(manual.factors.U))
+
+
+def test_sketch_service_key_tree(key):
+    """flush_factors derives each request's estimation key as
+    fold_in(request key, 1) — frozen and observable through the service."""
+    from repro.serve.engine import SketchService
+    _eq(jax.random.fold_in(key, 1), SERVICE_EST_KEY)
+    A = jax.random.normal(key, (64, 6))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (64, 5))
+    svc = SketchService(k=8, backend="scan", block=32)
+    ticket = svc.submit(key, A, B)
+    served = svc.flush_factors(r=2, m=100, T=2)[ticket]
+    summary = summary_engine.build_summary(key, A, B, 8, backend="scan",
+                                           block=32)
+    manual = estimation_engine.estimate_product(
+        jnp.asarray(SERVICE_EST_KEY, jnp.uint32), summary, 2, m=100, T=2)
+    np.testing.assert_array_equal(np.asarray(served.factors.U),
+                                  np.asarray(manual.factors.U))
+
+
+def test_probe_key_tree(key):
+    """The ErrorEngine's reserved two-level probe fold is frozen, and
+    build_summary's retained probe_omega is drawn from exactly that key."""
+    _eq(probe_key(key), PROBE_KEY)
+    _eq(jax.random.fold_in(key, 0x70726F62),
+        np.asarray([3608120998, 148634447], np.uint32))
+    A = jax.random.normal(key, (64, 6))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (64, 5))
+    s = summary_engine.build_summary(key, A, B, 8, probes=4)
+    np.testing.assert_array_equal(
+        np.asarray(s.probe_omega),
+        np.asarray(jax.random.normal(jnp.asarray(PROBE_KEY, jnp.uint32),
+                                     (5, 4))))
+    np.testing.assert_array_equal(np.asarray(probe_omega(key, 5, 4)),
+                                  np.asarray(s.probe_omega))

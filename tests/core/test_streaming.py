@@ -22,11 +22,7 @@ except ImportError:
 from repro import core
 from repro.core import streaming
 from repro.core.summary_engine import build_summary
-
-
-def _pair(key, d=192, n1=11, n2=7):
-    kA, kB = jax.random.split(key)
-    return (jax.random.normal(kA, (d, n1)), jax.random.normal(kB, (d, n2)))
+from tests.conftest import gaussian_pair as _pair
 
 
 def _ingest(summ, key, A, B, chunk):
@@ -349,6 +345,7 @@ def test_stream_session_resumes_from_checkpoint(key, tmp_path):
 # Distributed tree-reduce
 # ---------------------------------------------------------------------------
 
+@pytest.mark.dist
 def test_distributed_streaming_tree_reduce():
     """Per-device partial states merged by one psum (2-shard CPU mesh, slab
     chunking) match the reference summary, both methods."""

@@ -14,12 +14,11 @@ import pytest
 
 from repro import core
 from repro.core import summary_engine as se
-from tests.conftest import planted_pair
+from tests.conftest import gaussian_pair, planted_pair
 
 
 def _pair(key, d=300, n1=24, n2=18):
-    kA, kB = jax.random.split(key)
-    return (jax.random.normal(kA, (d, n1)), jax.random.normal(kB, (d, n2)))
+    return gaussian_pair(key, d, n1, n2)
 
 
 def _assert_summary_close(got, want, rtol=2e-4, atol_scale=1e-5):
@@ -51,6 +50,7 @@ def test_backend_parity_vs_reference(key, method, backend):
         _assert_summary_close(got, ref)
 
 
+@pytest.mark.dist
 def test_distributed_backend_parity():
     """2-shard CPU mesh vs reference, both methods (subprocess: the main
     pytest process must keep the single real CPU device)."""

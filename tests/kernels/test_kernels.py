@@ -95,6 +95,43 @@ def test_sampled_dot_duplicate_indices():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
 
 
+def test_sampled_dot_empty_sample_set():
+    """m = 0 (an empty Omega) returns an empty result instead of tripping a
+    zero-size grid slice; kernel and oracle agree on the shape."""
+    kk = jax.random.PRNGKey(0)
+    As = jax.random.normal(kk, (5, 8))
+    Bs = jax.random.normal(jax.random.fold_in(kk, 1), (4, 8))
+    na, nb = jnp.ones((5,)), jnp.ones((4,))
+    empty = jnp.zeros((0,), jnp.int32)
+    got = ops.sampled_rescaled_dot(As, Bs, na, nb, empty, empty)
+    want = ref.sampled_rescaled_dot_ref(As, Bs, na, nb, empty, empty)
+    assert got.shape == want.shape == (0,)
+    assert got.dtype == jnp.float32
+
+
+def test_sampled_dot_more_samples_than_entries():
+    """m > n1 * n2: the sample necessarily repeats entries — every duplicate
+    gathers the identical sketch rows and the kernel matches the oracle
+    exactly (parity, not tolerance: same f32 ops per grid step)."""
+    kk = jax.random.PRNGKey(7)
+    As = jax.random.normal(kk, (5, 8))
+    Bs = jax.random.normal(jax.random.fold_in(kk, 1), (4, 8))
+    na = jnp.abs(jax.random.normal(jax.random.fold_in(kk, 2), (5,))) + 0.5
+    nb = jnp.abs(jax.random.normal(jax.random.fold_in(kk, 3), (4,))) + 0.5
+    m = 3 * 5 * 4                       # 3x the number of distinct entries
+    rows = jax.random.randint(jax.random.fold_in(kk, 4), (m,), 0, 5)
+    cols = jax.random.randint(jax.random.fold_in(kk, 5), (m,), 0, 4)
+    got = ops.sampled_rescaled_dot(As, Bs, na, nb, rows, cols)
+    want = ref.sampled_rescaled_dot_ref(As, Bs, na, nb, rows, cols)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # duplicates really occurred and agree among themselves
+    pairs = np.stack([np.asarray(rows), np.asarray(cols)], 1)
+    _, inv = np.unique(pairs, axis=0, return_inverse=True)
+    for g in range(inv.max() + 1):
+        vals = np.asarray(got)[inv == g]
+        assert np.all(vals == vals[0])
+
+
 # ---------------------------------------------------------------------------
 # hadamard
 # ---------------------------------------------------------------------------

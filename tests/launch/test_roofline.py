@@ -2,6 +2,7 @@
 fusion io), collective parser, sharding rules, shapes/applicability."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs.shapes import SHAPES, cell_applicable
 from repro.roofline import analysis as roof
@@ -111,6 +112,7 @@ def test_shapes_registry_complete():
     assert SHAPES["long_500k"].global_batch == 1
 
 
+@pytest.mark.dist
 def test_sharding_divisibility_fallback():
     """12 heads / 16-way model axis -> replicate (whisper case)."""
     from tests.dist.helpers import run_with_devices
@@ -133,6 +135,7 @@ def test_sharding_divisibility_fallback():
     assert "SHARDING_OK" in out
 
 
+@pytest.mark.dist
 def test_cache_spec_kv_fallbacks():
     from tests.dist.helpers import run_with_devices
     out = run_with_devices("""
@@ -151,6 +154,7 @@ def test_cache_spec_kv_fallbacks():
     assert "CACHE_OK" in out
 
 
+@pytest.mark.dist
 def test_mesh_factories():
     from tests.dist.helpers import run_with_devices
     out = run_with_devices("""

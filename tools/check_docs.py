@@ -4,7 +4,8 @@
     PYTHONPATH=src python tools/check_docs.py --links-only
 
 Doctests cover the public API surface (build_summary, estimate_product,
-SketchService, StreamingSummarizer) — the examples in those docstrings are
+estimate_error/adaptive_rank, SketchService, StreamingSummarizer) — the
+examples in those docstrings are
 executable documentation and this is what keeps them honest. The link check
 walks README.md and docs/**/*.md and fails on any relative link or image
 whose target does not exist (http(s)/mailto/anchor links are skipped).
@@ -24,6 +25,7 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DOCTEST_MODULES = (
     "repro.core.summary_engine",
     "repro.core.estimation_engine",
+    "repro.core.error_engine",
     "repro.core.streaming",
     "repro.serve.engine",
 )
