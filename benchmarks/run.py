@@ -13,7 +13,12 @@ with parity errors — and writes ``BENCH_streaming.json``
 (``--out-streaming``). ``--suite error`` runs the ``error_sweep`` —
 estimated-vs-true residual across rank x probe-count cells plus the
 ``adaptive_rank`` tolerance sweep — and writes ``BENCH_error.json``
-(``--out-error``); ``--smoke`` shrinks sizes for CI.
+(``--out-error``). ``--suite serving`` runs the ``serving_sweep`` —
+cold-vs-warm ``SketchService`` plans through the compile-once
+PipelineEngine (per-request latency, trace counts, executable-cache hits
+for fixed-rank, with-error, and quality-gated plans) — and writes
+``BENCH_serving.json`` (``--out-serving``); ``--smoke`` shrinks sizes
+for CI.
 
 Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
 spectrum-matched synthetic stand-ins validate the paper's *relative* claims
@@ -519,6 +524,76 @@ def error_sweep(key, *, smoke: bool = False) -> dict:
     }
 
 
+def serving_sweep(key, *, smoke: bool = False) -> dict:
+    """Serving sweep: trace counts + per-request latency, cold vs warm plans.
+
+    One shape bucket of L requests per plan, served by a ``SketchService``
+    on a fresh ``PipelineEngine``. The *cold* flush pays the plan's traces
+    (compilation); every *warm* flush must be pure cache hits — zero new
+    traces, one fused dispatch per bucket. Cells cover the three serving
+    modes: fixed rank, fixed rank + attached error estimate, and the
+    quality-gated ``r='auto'`` single-sweep path. The record the acceptance
+    gate reads: ``traces_warm`` must be 0 in every cell, and
+    ``cold_over_warm`` shows what compile-once buys per request.
+    """
+    from repro.core.pipeline import PipelineEngine
+    from repro.serve.engine import SketchService
+    if smoke:
+        d, n, k, L, probes, m, warm_reps = 512, 32, 64, 4, 8, 800, 3
+    else:
+        d, n, k, L, probes, m, warm_reps = 4096, 128, 128, 16, 16, 6000, 10
+    pairs = [_gd_pair(jax.random.fold_in(key, i), d, n, corr=0.3)
+             for i in range(L)]
+    plans = [
+        ("fixed_r", dict(r=5, m=m, T=4)),
+        ("fixed_r_with_error", dict(r=5, m=m, T=4, with_error=True)),
+        ("auto_rank", dict(r="auto", tol=0.5, m=m, T=4)),
+    ]
+    results = []
+    for name, kw in plans:
+        engine = PipelineEngine()
+        svc = SketchService(k=k, backend="scan", block=1024, probes=probes,
+                            engine=engine)
+
+        def flush_once(kw=kw, svc=svc):
+            for i, (A, B) in enumerate(pairs):
+                svc.submit(jax.random.fold_in(key, i), A, B)
+            out = svc.flush_factors(**kw)
+            jax.block_until_ready([v.factors.U for v in out.values()])
+            return out
+
+        t0 = time.perf_counter()
+        flush_once()
+        cold_us = (time.perf_counter() - t0) * 1e6
+        traces_cold = engine.stats.traces
+        t0 = time.perf_counter()
+        for _ in range(warm_reps):
+            flush_once()
+        warm_us = (time.perf_counter() - t0) / warm_reps * 1e6
+        results.append({
+            "name": name,
+            "requests_per_flush": L,
+            "cold_us_per_request": cold_us / L,
+            "warm_us_per_request": warm_us / L,
+            "cold_over_warm": cold_us / warm_us,
+            "traces_cold": traces_cold,
+            "traces_warm": engine.stats.traces - traces_cold,
+            "est_dispatches_per_flush":
+                engine.stats.est_dispatches / (warm_reps + 1),
+            "cache": {"hits": engine.stats.hits,
+                      "misses": engine.stats.misses,
+                      "evictions": engine.stats.evictions},
+        })
+    return {
+        "suite": "serving",
+        "config": {"d": d, "n": n, "k": k, "L": L, "probes": probes, "m": m,
+                   "warm_reps": warm_reps, "smoke": smoke,
+                   "backend_platform": jax.default_backend()},
+        "results": results,
+        "max_traces_warm": max(rec["traces_warm"] for rec in results),
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -579,6 +654,22 @@ def run_error_suite(key, out_path: str, smoke: bool) -> None:
     print(f"worst_ratio,{report['worst_ratio']:.3f}", flush=True)
 
 
+def run_serving_suite(key, out_path: str, smoke: bool) -> None:
+    report = serving_sweep(jax.random.fold_in(
+        key, zlib.crc32(b"serving") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,cold_us_per_req,warm_us_per_req,cold_over_warm,"
+          "traces_cold,traces_warm")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['cold_us_per_request']:.0f},"
+              f"{rec['warm_us_per_request']:.0f},"
+              f"{rec['cold_over_warm']:.2f},"
+              f"{rec['traces_cold']},{rec['traces_warm']}", flush=True)
+    print(f"max_traces_warm,{report['max_traces_warm']}", flush=True)
+
+
 def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
     report = streaming_sweep(jax.random.fold_in(
         key, zlib.crc32(b"streaming") % 2**31), smoke=smoke)
@@ -597,7 +688,7 @@ def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite",
                    choices=("paper", "estimation", "streaming", "error",
-                            "all"),
+                            "serving", "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
@@ -607,6 +698,8 @@ def main() -> None:
                    help="JSON artifact path for the streaming suite")
     p.add_argument("--out-error", default="BENCH_error.json",
                    help="JSON artifact path for the error suite")
+    p.add_argument("--out-serving", default="BENCH_serving.json",
+                   help="JSON artifact path for the serving suite")
     args = p.parse_args()
     key = jax.random.PRNGKey(0)
     if args.suite in ("paper", "all"):
@@ -617,6 +710,8 @@ def main() -> None:
         run_streaming_suite(key, args.out_streaming, args.smoke)
     if args.suite in ("error", "all"):
         run_error_suite(key, args.out_error, args.smoke)
+    if args.suite in ("serving", "all"):
+        run_serving_suite(key, args.out_serving, args.smoke)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@ Public API:
     build_summary / rows_summary                          (step 1: the engine)
     estimate_product                                      (steps 2-3: the engine)
     estimate_error / adaptive_rank / probe_omega          (quality: ErrorEngine)
+    PipelinePlan / PipelineEngine / get_engine            (compile-once plans)
     sketch_summary / sketch_pass / streamed_rows_summary  (step 1, legacy wrappers)
     sample_entries / q_probabilities                      (step 2a, Eq 1)
     rescaled_entries / rescaled_matrix                    (step 2b, Eq 2)
@@ -18,13 +19,14 @@ from repro.core.types import (
     SMPPCAResult)
 from repro.core.error_engine import (
     AdaptiveRankResult, adaptive_rank, estimate_error, merge_probes,
-    probe_contribution, probe_omega, probe_pass)
+    probe_contribution, probe_omega, probe_pass, rank_curve)
 from repro.core.sketch import (
     column_norms, fwht, gaussian_pi, merge_summaries, pi_rows, sketch_pass,
     sketch_summary, srht_sketch, streamed_rows_summary)
 from repro.core.summary_engine import (
-    backends, build_summary, identity_product_summary, projection_rows,
-    register_backend, rows_summary, srht_plan, tap_pair_summary)
+    backends, build_summary, identity_product_summary, norms_only_summary,
+    projection_rows, register_backend, rows_summary, srht_plan,
+    summary_stage, tap_pair_summary)
 from repro.core.sampling import (
     q_at, q_probabilities, sample_entries, sample_entries_binomial, split_omega)
 from repro.core.estimator import (
@@ -32,11 +34,14 @@ from repro.core.estimator import (
 from repro.core.waltmin import (
     coo_matmat, coo_rmatmat, coo_topr_svd, waltmin, waltmin_reference)
 from repro.core.estimation_engine import (
-    default_m, estimate_product, estimators, exact_entries, implicit_topr,
-    register_estimator)
+    default_m, estimate_product, estimation_stage, estimators, exact_entries,
+    implicit_topr, register_estimator)
+from repro.core.pipeline import (
+    EstimationSpec, PipelineEngine, PipelinePlan, PipelineResult, RankPolicy,
+    SketchSpec, get_engine, lela_plan, sketch_svd_plan, smppca_plan)
 from repro.core.smppca import (
     smppca, smppca_from_summary, spectral_error, spectral_error_vs_optimal)
-from repro.core.lela import lela, norms_only_summary
+from repro.core.lela import lela
 from repro.core.baselines import optimal_rank_r, product_of_pcas, sketch_svd
 from repro.core.distributed import (
     distributed_sketch_summary, distributed_smppca,

@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimation_engine, summary_engine
+from repro.core import pipeline
 from repro.core.estimation_engine import implicit_topr as _implicit_topr
 from repro.core.types import LowRankFactors
 
@@ -26,18 +26,15 @@ def optimal_rank_r(A: jax.Array, B: jax.Array, r: int) -> LowRankFactors:
     return LowRankFactors(U[:, :r] * s[:r], Vt[:r].T)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "k", "method", "backend",
-                                             "est_backend"))
 def sketch_svd(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
                method: str = "gaussian", backend: str = "reference",
                est_backend: str = "jit") -> LowRankFactors:
-    """SVD(A~^T B~): the two engines composed with method='direct_svd'."""
-    k_sketch, k_pow = jax.random.split(key)
-    summary = summary_engine.build_summary(k_sketch, A, B, k, method=method,
-                                           backend=backend)
-    est = estimation_engine.estimate_product(
-        k_pow, summary, r, method="direct_svd", backend=est_backend)
-    return est.factors
+    """SVD(A~^T B~): the sketch + direct_svd plan preset executed through the
+    compile-once PipelineEngine (one fused dispatch; historical split(key)
+    layout preserved bit-for-bit)."""
+    plan = pipeline.sketch_svd_plan(r=r, k=k, method=method, backend=backend,
+                                    est_backend=est_backend)
+    return pipeline.get_engine().run(plan, key, A, B).estimate.factors
 
 
 @functools.partial(jax.jit, static_argnames=("r",))

@@ -202,6 +202,21 @@ def estimate_error(summary: SketchSummary, factors: LowRankFactors, *,
                          frob / jnp.maximum(m_frob, _EPS))
 
 
+def rank_curve(summary: SketchSummary, r_max: int) -> jax.Array:
+    """Estimated relative-error curve for every rank 1..r_max (fusable stage).
+
+    ``curve[i]`` is the estimated relative Frobenius error of the rank-(i+1)
+    truncation of the rescaled sketch product, measured against the held-out
+    probe block — ONE SVD and ONE probe projection for the whole curve (the
+    ``adaptive_rank`` sweep, exposed as a pure traceable stage). This is what
+    the PipelineEngine's quality-gated serving path reads once per bucket
+    instead of re-running an estimation dispatch per candidate rank.
+    """
+    _require_probes(summary)
+    rel, _, _, _ = _rank_curve(summary, r_max)
+    return rel
+
+
 # ---------------------------------------------------------------------------
 # Adaptive rank selection
 # ---------------------------------------------------------------------------

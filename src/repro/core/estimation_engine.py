@@ -337,6 +337,22 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
     return _maybe_error(out, summary, with_error, batched=True)
 
 
+def estimation_stage(spec, key: jax.Array, summary: SketchSummary, r: int, *,
+                     exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     with_error: bool = False) -> EstimateResult:
+    """Steps 2-3 as a fusable stage driven by a declarative spec.
+
+    ``spec`` is any object with the ``EstimationSpec`` fields (method,
+    backend, m, T, use_splits) — ``core.pipeline`` owns the concrete type.
+    Pure and traceable: the PipelineEngine composes it with the summary and
+    error stages inside ONE jitted executable.
+    """
+    return estimate_product(key, summary, r, method=spec.method,
+                            backend=spec.backend, m=spec.m, T=spec.T,
+                            use_splits=spec.use_splits, exact_pair=exact_pair,
+                            with_error=with_error)
+
+
 def _maybe_error(result: EstimateResult, summary: SketchSummary,
                  with_error: bool, *, batched: bool = False) -> EstimateResult:
     """Attach the a-posteriori ErrorEstimate — one (possibly vmapped)

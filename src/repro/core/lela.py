@@ -5,37 +5,26 @@ sampled Omega. Then the same WAltMin completion. SMP-PCA replaces pass 2 with
 the rescaled-JL estimate; comparing the two isolates the cost of sketching
 (the eta*sigma_r^* term in Thm 3.1).
 
-A thin composition over the EstimationEngine: pass 1 builds a sketch-free
-summary (norms only), and ``estimate_product(method='lela_waltmin',
-exact_pair=(A, B))`` runs the sampled second pass + completion.
+A thin preset over the PipelineEngine: ``lela`` executes
+``pipeline.lela_plan`` (a sketch-free ``norms_only`` first stage +
+``method='lela_waltmin'`` estimation fed the original pair as its exact
+second pass) as one plan-compiled fused dispatch. The caller key goes
+straight to estimation (``key_layout='direct'``), bit-for-bit the historical
+derivation.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import estimation_engine
-from repro.core.types import LowRankFactors, SketchSummary
+from repro.core import pipeline
+from repro.core.summary_engine import norms_only_summary
+from repro.core.types import LowRankFactors
 
-
-def norms_only_summary(A: jax.Array, B: jax.Array) -> SketchSummary:
-    """Pass 1: a ``SketchSummary`` with exact column norms and empty (0, n)
-    sketches — all a norm-driven estimator (lela_waltmin) consumes."""
-    norm_A = jnp.sqrt(jnp.sum(A.astype(jnp.float32) ** 2, axis=0))
-    norm_B = jnp.sqrt(jnp.sum(B.astype(jnp.float32) ** 2, axis=0))
-    return SketchSummary(jnp.zeros((0, A.shape[1]), jnp.float32),
-                         jnp.zeros((0, B.shape[1]), jnp.float32),
-                         norm_A, norm_B)
+__all__ = ["lela", "norms_only_summary"]
 
 
-@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
 def lela(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, m: int,
          T: int = 10, use_splits: bool = False) -> LowRankFactors:
     """LELA two-pass baseline: biased sample + exact entries + WAltMin."""
-    summary = norms_only_summary(A, B)
-    est = estimation_engine.estimate_product(
-        key, summary, r, method="lela_waltmin", backend="jit", m=m, T=T,
-        use_splits=use_splits, exact_pair=(A, B))
-    return est.factors
+    plan = pipeline.lela_plan(r=r, m=m, T=T, use_splits=use_splits)
+    return pipeline.get_engine().run(plan, key, A, B).estimate.factors

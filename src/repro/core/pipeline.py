@@ -1,0 +1,513 @@
+"""PipelineEngine — compile-once execution of the paper's fixed pipeline.
+
+The paper's method is a fixed recipe: one-pass summary of (A, B), then
+completion of the top-r factors from the sketch plus side information,
+then (optionally) an a-posteriori quality estimate. Tropp et al.'s
+practical-sketching framework treats exactly this as a fixed-storage,
+fixed-recipe pipeline that is *compiled once and fed data* — this module
+makes that operational:
+
+* ``PipelinePlan`` — a declarative, hashable description of the whole
+  pipeline: the sketch stage (``SketchSpec``: method/backend/k/block/
+  precision/probes), the estimation stage (``EstimationSpec``: method/
+  backend/m/T/use_splits), the rank policy (``RankPolicy``: fixed ``r``,
+  or auto with ``tol``/``r_max``), the key layout (how the caller's one
+  base key fans out into the per-stage keys), and error attachment.
+* ``PipelineEngine`` — compiles a plan into ONE jitted executable spanning
+  all three engines (summary -> estimation -> error estimate fused in a
+  single device dispatch; batched/vmapped mode included), behind an LRU
+  executable cache keyed on ``(plan, shape/dtype signature)``. Repeat
+  traffic on a warm plan never re-traces: it is one cache lookup and one
+  fused dispatch.
+
+``smppca`` / ``lela`` / ``sketch_svd`` are thin presets over this engine
+(``smppca_plan`` / ``lela_plan`` / ``sketch_svd_plan``), and
+``serve.SketchService`` runs every ``flush_factors`` / ``stream_factors``
+bucket through the same cache. Key derivations are bit-for-bit the
+historical ones (golden-tested in tests/core/test_key_contract.py), and the
+fused executables produce bit-identical results to the stage-by-stage
+composition — compiling the pipeline changes *when* work is traced, never
+*what* is computed.
+
+Quality-gated rank (``RankPolicy(r=None, tol=...)``) runs as: one fused
+summary+rank-curve dispatch (the ``adaptive_rank`` sweep — a single SVD of
+the rescaled sketch product scores EVERY candidate rank), one host read of
+the curve to fast-forward the doubling schedule past ranks that provably
+fail, then an estimation dispatch at the chosen rank whose *served*
+a-posteriori estimate is the authoritative gate (further doubling happens
+only if the curve was optimistic about the completion method). The common
+case is ONE estimation dispatch total; the stage-by-stage escalation it
+replaces re-ran a full estimation dispatch plus a blocking host sync per
+doubling round unconditionally.
+
+>>> import jax, jax.numpy as jnp
+>>> from repro.core.pipeline import PipelineEngine, smppca_plan
+>>> key = jax.random.PRNGKey(0)
+>>> A = jax.random.normal(key, (128, 12))
+>>> B = jax.random.normal(jax.random.fold_in(key, 1), (128, 10))
+>>> engine = PipelineEngine()
+>>> plan = smppca_plan(r=3, k=32, m=400, T=2)    # hashable, declarative
+>>> res = engine.run(plan, key, A, B)            # cold: trace once
+>>> (res.estimate.factors.U.shape, res.estimate.factors.V.shape)
+((12, 3), (10, 3))
+>>> _ = engine.run(plan, key, A, B)              # warm: one fused dispatch
+>>> (engine.stats.traces, engine.stats.hits, engine.stats.misses)
+(1, 1, 1)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import error_engine, estimation_engine, summary_engine
+from repro.core.types import EstimateResult, SketchSummary
+
+#: Supported key layouts — how one caller key fans out into per-stage keys.
+LAYOUTS = ("service", "smppca", "sketch_svd", "direct")
+
+# historical start rank of the quality-gated doubling schedule
+_R0 = 4
+
+
+class SketchSpec(NamedTuple):
+    """Declarative step-1 stage: what ``summary_stage`` builds.
+
+    ``method='norms_only'`` is the sketch-free LELA first pass (``k``,
+    ``backend``, ``block``, ``precision`` and the sketch key are unused).
+    """
+
+    method: str = "gaussian"       # 'gaussian' | 'srht' | 'norms_only'
+    backend: str = "reference"     # summary_engine.backends() minus 'distributed'
+    k: int = 128
+    block: int = 1024
+    precision: Optional[str] = None
+    probes: int = 0
+
+
+class EstimationSpec(NamedTuple):
+    """Declarative steps-2/3 stage: what ``estimation_stage`` runs.
+
+    ``m=None`` means the paper's default sample budget (``default_m``),
+    resolved at trace time from the summary's static shapes.
+    """
+
+    method: str = "rescaled_jl"    # estimation_engine.METHODS
+    backend: str = "jit"           # estimation_engine.BACKENDS
+    m: Optional[int] = None
+    T: int = 10
+    use_splits: bool = False
+
+
+class RankPolicy(NamedTuple):
+    """Rank selection: fixed (``r=<int>``) or quality-gated auto.
+
+    ``r=None`` with ``tol=<relative Frobenius error>`` gates the rank: the
+    engine reads the per-rank error curve once (one fused SVD sweep) and
+    picks the first rank on the doubling schedule (4, 8, 16, ... capped at
+    ``r_max`` and min(n1, n2, k)) whose estimated error meets ``tol``.
+    """
+
+    r: Optional[int] = None
+    tol: Optional[float] = None
+    r_max: Optional[int] = None
+
+    @property
+    def auto(self) -> bool:
+        """True when the rank is quality-gated rather than fixed."""
+        return self.r is None
+
+
+class PipelinePlan(NamedTuple):
+    """The whole pipeline as one hashable value — the executable-cache key.
+
+    ``key_layout`` fixes how the caller's base key fans out into the
+    (sketch key, estimation key) pair; the layouts are the frozen historical
+    derivations (see docs/architecture.md "Where the randomness lives"):
+
+    * ``'service'``    sketch = key, estimation = ``fold_in(key, 1)``
+      (vmapped over the key stack in batched mode) — ``SketchService``;
+    * ``'smppca'``     ``split(key, 3)`` -> sketch = part 0, estimation =
+      ``fold_in(part 1, 0)`` — Algorithm 1's layout;
+    * ``'sketch_svd'`` ``split(key)`` -> (sketch, estimation);
+    * ``'direct'``     both stages get the caller key unchanged — LELA.
+
+    ``with_error`` attaches the ErrorEngine estimate inside the same fused
+    dispatch (needs ``sketch.probes > 0``); the quality-gated path always
+    attaches it, mirroring the escalation loop it replaces.
+    """
+
+    sketch: SketchSpec = SketchSpec()
+    estimation: EstimationSpec = EstimationSpec()
+    rank: RankPolicy = RankPolicy()
+    key_layout: str = "service"
+    with_error: bool = False
+
+
+class PipelineResult(NamedTuple):
+    """One pipeline execution: the step-1 summary + the step-2/3 estimate
+    (with the ErrorEngine estimate attached when the plan asked for it)."""
+
+    summary: SketchSummary
+    estimate: EstimateResult
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Observable engine counters (the compile-counter hook the cache tests
+    read). ``traces`` increments inside the traced Python body, so it counts
+    actual XLA traces — a warm cache shows dispatches without traces."""
+
+    traces: int = 0            # XLA traces (executable compilations)
+    hits: int = 0              # executable-cache hits
+    misses: int = 0            # executable-cache misses (fresh builds)
+    evictions: int = 0         # LRU evictions past max_entries
+    est_dispatches: int = 0    # dispatches of an estimation-carrying executable
+    curve_dispatches: int = 0  # dispatches of a rank-curve executable
+
+
+def derive_keys(layout: str, key: jax.Array, *, batched: bool = False):
+    """(sketch key, estimation key) under a fixed layout — pure/traceable.
+
+    The ONE place the plan-path key fan-out lives; every derivation is the
+    frozen historical one, golden-tested in tests/core/test_key_contract.py.
+    Batched mode (a stacked key per pair) is a 'service' notion: the other
+    layouts take exactly one caller key.
+    """
+    if layout == "service":
+        if batched:
+            return key, jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(key)
+        return key, jax.random.fold_in(key, 1)
+    if batched:
+        raise NotImplementedError(
+            f"batched pipelines are only defined for key_layout='service' "
+            f"(got {layout!r})")
+    if layout == "smppca":
+        k_sketch, k_sample, _ = jax.random.split(key, 3)
+        return k_sketch, jax.random.fold_in(k_sample, 0)
+    if layout == "sketch_svd":
+        k_sketch, k_pow = jax.random.split(key)
+        return k_sketch, k_pow
+    if layout == "direct":
+        return key, key
+    raise ValueError(f"unknown key layout {layout!r} (use one of {LAYOUTS})")
+
+
+def validate_plan(plan: PipelinePlan) -> None:
+    """Reject malformed plans eagerly, before any executable is built."""
+    if not isinstance(plan, PipelinePlan):
+        raise TypeError(f"expected a PipelinePlan, got {type(plan).__name__}")
+    sk, est, rank = plan.sketch, plan.estimation, plan.rank
+    if plan.key_layout not in LAYOUTS:
+        raise ValueError(f"unknown key layout {plan.key_layout!r} "
+                         f"(use one of {LAYOUTS})")
+    if sk.method not in summary_engine.METHODS + ("norms_only",):
+        raise ValueError(f"unknown sketch method {sk.method!r} (use "
+                         f"{summary_engine.METHODS + ('norms_only',)})")
+    if sk.method != "norms_only":
+        if sk.backend not in summary_engine.backends():
+            raise ValueError(f"unknown summary backend {sk.backend!r} "
+                             f"(use one of {summary_engine.backends()})")
+        if sk.backend == "distributed":
+            raise ValueError(
+                "backend='distributed' needs a mesh and is not "
+                "plan-compilable — use build_summary(..., mesh=, axis=) "
+                "or distributed_streaming_summary directly")
+    if est.method not in estimation_engine.METHODS:
+        raise ValueError(f"unknown estimation method {est.method!r} "
+                         f"(use one of {estimation_engine.METHODS})")
+    if est.backend not in estimation_engine.BACKENDS:
+        raise ValueError(f"unknown estimation backend {est.backend!r} "
+                         f"(use one of {estimation_engine.BACKENDS})")
+    if rank.auto:
+        if rank.tol is None:
+            raise ValueError(
+                "RankPolicy(r=None) is quality-gated and needs tol= "
+                "(the relative-error gate)")
+        if plan.sketch.probes <= 0:
+            raise ValueError(
+                "quality-gated rank needs a probe-carrying sketch stage — "
+                "set SketchSpec(probes=p)")
+    elif not isinstance(rank.r, int):
+        raise ValueError(f"RankPolicy.r must be an int or None, "
+                         f"got {rank.r!r}")
+    if plan.with_error and plan.sketch.probes <= 0:
+        raise ValueError("with_error=True needs SketchSpec(probes=p)")
+
+
+def _signature(tree) -> tuple:
+    """Shape/dtype signature of an argument pytree (the cache-key half that
+    tracks what the executable was traced for)."""
+    return tuple((tuple(leaf.shape), str(leaf.dtype))
+                 for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class PipelineEngine:
+    """LRU cache of plan-compiled executables + the host-side rank gate.
+
+    One engine instance is one executable cache: facades share the process
+    default (``get_engine()``), services can hold their own. ``max_entries``
+    bounds the cache; the least-recently-used executable is dropped past it
+    (``stats.evictions``) and re-traced on next use.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._cache: "collections.OrderedDict[tuple, Callable]" = \
+            collections.OrderedDict()
+        self.stats = EngineStats()
+
+    # -- cache plumbing ----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def clear(self) -> None:
+        """Drop every cached executable (counters are kept)."""
+        self._cache.clear()
+
+    def _executable(self, cache_key: tuple, build: Callable) -> Callable:
+        try:
+            fn = self._cache[cache_key]
+        except KeyError:
+            self.stats.misses += 1
+            fn = build()
+            self._cache[cache_key] = fn
+            if len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+                self.stats.evictions += 1
+            return fn
+        self._cache.move_to_end(cache_key)
+        self.stats.hits += 1
+        return fn
+
+    # -- executable builders (each body traces exactly once per cache entry)
+
+    def _build_full(self, plan: PipelinePlan, batched: bool) -> Callable:
+        def pipeline_fn(key, A, B):
+            self.stats.traces += 1
+            k_sketch, k_est = derive_keys(plan.key_layout, key,
+                                          batched=batched)
+            summary = summary_engine.summary_stage(plan.sketch, k_sketch,
+                                                   A, B)
+            exact = (A, B) if plan.estimation.method == "lela_waltmin" \
+                else None
+            est = estimation_engine.estimation_stage(
+                plan.estimation, k_est, summary, plan.rank.r,
+                exact_pair=exact, with_error=plan.with_error)
+            return PipelineResult(summary, est)
+        return jax.jit(pipeline_fn)
+
+    def _build_curve_full(self, plan: PipelinePlan, batched: bool) -> Callable:
+        def curve_fn(key, A, B):
+            self.stats.traces += 1
+            k_sketch, _ = derive_keys(plan.key_layout, key, batched=batched)
+            summary = summary_engine.summary_stage(plan.sketch, k_sketch,
+                                                   A, B)
+            return summary, self._curve(plan, summary, batched)
+        return jax.jit(curve_fn)
+
+    def _build_curve_from_summary(self, plan: PipelinePlan,
+                                  batched: bool) -> Callable:
+        def curve_fn(summary):
+            self.stats.traces += 1
+            return self._curve(plan, summary, batched)
+        return jax.jit(curve_fn)
+
+    def _build_from_summary(self, plan: PipelinePlan,
+                            batched: bool) -> Callable:
+        def estimate_fn(key, summary, exact_pair):
+            self.stats.traces += 1
+            _, k_est = derive_keys(plan.key_layout, key, batched=batched)
+            return estimation_engine.estimation_stage(
+                plan.estimation, k_est, summary, plan.rank.r,
+                exact_pair=exact_pair, with_error=plan.with_error)
+        return jax.jit(estimate_fn)
+
+    def _build_summary_only(self, spec: SketchSpec) -> Callable:
+        def summary_fn(key, A, B):
+            self.stats.traces += 1
+            return summary_engine.summary_stage(spec, key, A, B)
+        return jax.jit(summary_fn)
+
+    def _curve(self, plan: PipelinePlan, summary, batched: bool):
+        """Per-rank estimated-error curve up to the plan's rank cap.
+
+        Shapes are static under trace, so the cap is resolved here and baked
+        into the executable. Batched summaries get one vmapped sweep."""
+        n1 = int(summary.A_sketch.shape[-1])
+        n2 = int(summary.B_sketch.shape[-1])
+        cap = min(n1, n2, plan.sketch.k)
+        r_cap = cap if plan.rank.r_max is None else min(plan.rank.r_max, cap)
+        if batched:
+            return jax.vmap(lambda s: error_engine.rank_curve(s, r_cap))(
+                summary)
+        return error_engine.rank_curve(summary, r_cap)
+
+    # -- the rank gate (host side; ONE curve read per bucket) --------------
+
+    @staticmethod
+    def _pick_rank(curve, tol: float) -> int:
+        """First rank on the doubling schedule whose estimated error meets
+        ``tol`` for EVERY request in the bucket (else the cap) — the exact
+        decision rule of the per-round escalation loop this replaces, read
+        off the precomputed curve in one host sync."""
+        worst = np.asarray(jax.device_get(curve))
+        if worst.ndim == 2:
+            worst = worst.max(axis=0)
+        r_cap = int(worst.shape[0])
+        r = min(_R0, r_cap)
+        while worst[r - 1] > tol and r < r_cap:
+            r = min(2 * r, r_cap)
+        return r
+
+    @staticmethod
+    def _curve_cache_plan(plan: PipelinePlan) -> PipelinePlan:
+        """The curve executable never reads ``tol`` (it is consumed host-side
+        by the rank pick), so strip it from the cache key — gated requests
+        differing only in tolerance share one compiled sweep."""
+        return plan._replace(rank=plan.rank._replace(tol=None))
+
+    def _gated_estimate(self, plan: PipelinePlan, key, summary, curve,
+                        exact_pair) -> EstimateResult:
+        """The quality gate: the precomputed curve fast-forwards the doubling
+        schedule to its first plausible rank, then the *served* factors'
+        a-posteriori estimate is the authoritative check — if it still misses
+        ``tol`` (the curve scores SVD truncations of the rescaled sketch
+        product; a completion method's factors can be worse), the schedule
+        keeps doubling exactly like the escalation loop this replaces. The
+        common case is ONE estimation dispatch; extra rounds happen only when
+        the curve was optimistic."""
+        r_cap = int(curve.shape[-1])
+        r = self._pick_rank(curve, plan.rank.tol)
+        while True:
+            fixed = plan._replace(rank=RankPolicy(r=r), with_error=True)
+            est = self._estimate_from_summary(fixed, key, summary, exact_pair)
+            worst = float(np.max(np.asarray(jax.device_get(
+                est.error.rel_est))))
+            if worst <= plan.rank.tol or r >= r_cap:
+                return est
+            r = min(2 * r, r_cap)
+
+    # -- entry points ------------------------------------------------------
+
+    def run(self, plan: PipelinePlan, key: jax.Array, A: jax.Array,
+            B: jax.Array) -> PipelineResult:
+        """Execute the whole plan on (A, B) — (d, n) pairs, or stacked
+        (L, d, n) with a key stack for the batched/vmapped mode.
+
+        Fixed rank: one fused summary->estimation->error dispatch. Auto rank:
+        one fused summary+curve dispatch, one host curve read, then the
+        curve-fast-forwarded estimation rounds of ``_gated_estimate`` (ONE
+        dispatch in the common case; ``with_error`` forced on, and the served
+        estimate — not the curve — has the final word on ``tol``).
+        """
+        validate_plan(plan)
+        batched = A.ndim == 3
+        if not plan.rank.auto:
+            fn = self._executable(("full", plan, _signature((key, A, B))),
+                                  lambda: self._build_full(plan, batched))
+            self.stats.est_dispatches += 1
+            return fn(key, A, B)
+        curve_plan = self._curve_cache_plan(plan)
+        fn = self._executable(
+            ("curve_full", curve_plan, _signature((key, A, B))),
+            lambda: self._build_curve_full(curve_plan, batched))
+        self.stats.curve_dispatches += 1
+        summary, curve = fn(key, A, B)
+        exact = (A, B) if plan.estimation.method == "lela_waltmin" else None
+        est = self._gated_estimate(plan, key, summary, curve, exact)
+        return PipelineResult(summary, est)
+
+    def run_from_summary(self, plan: PipelinePlan, key: jax.Array,
+                         summary: SketchSummary, *,
+                         exact_pair: Optional[Tuple[jax.Array, jax.Array]]
+                         = None) -> EstimateResult:
+        """Steps 2-3 (+ error) of the plan against an existing summary — the
+        compiled path streaming sessions share with ``run`` (the summary was
+        accumulated chunk-by-chunk, so the sketch stage already happened).
+        The estimation key is derived from ``key`` by the plan's layout,
+        exactly as ``run`` would."""
+        validate_plan(plan)
+        if not plan.rank.auto:
+            return self._estimate_from_summary(plan, key, summary, exact_pair)
+        batched = summary.A_sketch.ndim == 3
+        curve_plan = self._curve_cache_plan(plan)
+        fn = self._executable(
+            ("curve_summary", curve_plan, _signature(summary)),
+            lambda: self._build_curve_from_summary(curve_plan, batched))
+        self.stats.curve_dispatches += 1
+        return self._gated_estimate(plan, key, summary, fn(summary),
+                                    exact_pair)
+
+    def summarize(self, spec: SketchSpec, key: jax.Array, A: jax.Array,
+                  B: jax.Array) -> SketchSummary:
+        """The step-1 stage alone as a cached executable (``SketchService.
+        flush``) — ``key`` is the sketch key (no layout fan-out)."""
+        fn = self._executable(("summary", spec, _signature((key, A, B))),
+                              lambda: self._build_summary_only(spec))
+        return fn(key, A, B)
+
+    def _estimate_from_summary(self, plan, key, summary,
+                               exact_pair) -> EstimateResult:
+        batched = summary.A_sketch.ndim == 3
+        fn = self._executable(
+            ("est_summary", plan, _signature((key, summary, exact_pair))),
+            lambda: self._build_from_summary(plan, batched))
+        self.stats.est_dispatches += 1
+        return fn(key, summary, exact_pair)
+
+
+# ---------------------------------------------------------------------------
+# Plan presets — the algorithm facades as declarative plans
+# ---------------------------------------------------------------------------
+
+def smppca_plan(*, r: int, k: int, m: int, T: int = 10,
+                method: str = "gaussian", backend: str = "reference",
+                block: int = 1024, precision: Optional[str] = None,
+                est_backend: str = "jit",
+                use_splits: bool = False) -> PipelinePlan:
+    """Algorithm 1 (SMP-PCA) as a plan: gaussian/srht sketch -> rescaled-JL
+    entries -> WAltMin, under the historical split(key, 3) layout."""
+    return PipelinePlan(
+        sketch=SketchSpec(method=method, backend=backend, k=k, block=block,
+                          precision=precision),
+        estimation=EstimationSpec(method="rescaled_jl", backend=est_backend,
+                                  m=m, T=T, use_splits=use_splits),
+        rank=RankPolicy(r=r), key_layout="smppca")
+
+
+def lela_plan(*, r: int, m: int, T: int = 10,
+              use_splits: bool = False) -> PipelinePlan:
+    """The LELA two-pass baseline as a plan: norms-only first pass -> exact
+    sampled entries -> WAltMin (the caller key goes straight to estimation)."""
+    return PipelinePlan(
+        sketch=SketchSpec(method="norms_only", k=0),
+        estimation=EstimationSpec(method="lela_waltmin", backend="jit", m=m,
+                                  T=T, use_splits=use_splits),
+        rank=RankPolicy(r=r), key_layout="direct")
+
+
+def sketch_svd_plan(*, r: int, k: int, method: str = "gaussian",
+                    backend: str = "reference",
+                    est_backend: str = "jit") -> PipelinePlan:
+    """SVD(A~^T B~) as a plan: sketch -> direct top-r SVD of the sketch
+    product, under the historical split(key) layout."""
+    return PipelinePlan(
+        sketch=SketchSpec(method=method, backend=backend, k=k),
+        estimation=EstimationSpec(method="direct_svd", backend=est_backend),
+        rank=RankPolicy(r=r), key_layout="sketch_svd")
+
+
+_DEFAULT_ENGINE = PipelineEngine()
+
+
+def get_engine() -> PipelineEngine:
+    """The process-default engine the algorithm facades share — warm plans
+    stay warm across ``smppca``/``lela``/``sketch_svd``/service calls."""
+    return _DEFAULT_ENGINE

@@ -1,10 +1,17 @@
 """Algorithm 1: SMP-PCA — Streaming Matrix Product PCA, end to end.
 
-A thin composition of the two engines:
+A thin preset over the PipelineEngine: ``smppca`` builds the declarative
+``pipeline.smppca_plan`` (step-1 sketch spec + step-2/3 estimation spec under
+the historical ``split(key, 3)`` layout) and executes it through the shared
+compile-once engine — the whole sketch -> estimate pipeline is ONE fused
+jitted dispatch, cached per (plan, shape signature). Key derivations and
+results are bit-for-bit the historical stage-by-stage composition
 
     summary = summary_engine.build_summary(...)      (step 1: one pass)
     result  = estimation_engine.estimate_product(    (steps 2-3)
                   ..., method='rescaled_jl', ...)
+
+(golden-tested in tests/core/test_key_contract.py).
 """
 from __future__ import annotations
 
@@ -13,13 +20,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimation_engine, summary_engine
+from repro.core import estimation_engine, pipeline
 from repro.core.types import LowRankFactors, SketchSummary, SMPPCAResult
 
 
-@functools.partial(jax.jit, static_argnames=("r", "k", "m", "T", "method",
-                                              "backend", "block", "precision",
-                                              "est_backend", "use_splits"))
 def smppca(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
            m: int, T: int = 10, method: str = "gaussian",
            backend: str = "reference", block: int = 1024,
@@ -30,15 +34,14 @@ def smppca(key: jax.Array, A: jax.Array, B: jax.Array, *, r: int, k: int,
     The step-1 pass goes through the SummaryEngine (``method``/``backend``/
     ``block``/``precision`` select the sketch and its execution strategy);
     steps 2-3 go through the EstimationEngine (``est_backend`` selects the
-    completion execution strategy; the method is the paper's rescaled_jl)."""
-    k_sketch, k_sample, k_als = jax.random.split(key, 3)
-    del k_als  # historical key layout: estimation splits k_sample itself
-    summary = summary_engine.build_summary(
-        k_sketch, A, B, k, method=method, backend=backend, block=block,
-        precision=precision)
-    return smppca_from_summary(
-        jax.random.fold_in(k_sample, 0), summary, r=r, m=m, T=T,
-        est_backend=est_backend, use_splits=use_splits)
+    completion execution strategy; the method is the paper's rescaled_jl).
+    Both stages run as one plan-compiled fused dispatch (PipelineEngine)."""
+    plan = pipeline.smppca_plan(
+        r=r, k=k, m=m, T=T, method=method, backend=backend, block=block,
+        precision=precision, est_backend=est_backend, use_splits=use_splits)
+    res = pipeline.get_engine().run(plan, key, A, B)
+    return SMPPCAResult(res.estimate.factors, res.summary,
+                        res.estimate.samples, res.estimate.values)
 
 
 @functools.partial(jax.jit, static_argnames=("r", "m", "T", "est_backend",

@@ -390,6 +390,34 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
     return out
 
 
+def norms_only_summary(A: jax.Array, B: jax.Array) -> SketchSummary:
+    """A ``SketchSummary`` with exact column norms and empty (0, n) sketches —
+    LELA's first pass, all a norm-driven estimator (lela_waltmin) consumes."""
+    norm_A = jnp.sqrt(jnp.sum(A.astype(jnp.float32) ** 2, axis=0))
+    norm_B = jnp.sqrt(jnp.sum(B.astype(jnp.float32) ** 2, axis=0))
+    return SketchSummary(jnp.zeros((0, A.shape[1]), jnp.float32),
+                         jnp.zeros((0, B.shape[1]), jnp.float32),
+                         norm_A, norm_B)
+
+
+def summary_stage(spec, key: jax.Array, A: jax.Array,
+                  B: jax.Array) -> SketchSummary:
+    """The step-1 pass as a fusable stage driven by a declarative spec.
+
+    ``spec`` is any object with the ``SketchSpec`` fields (method, backend,
+    k, block, precision, probes) — ``core.pipeline`` owns the concrete type;
+    taking it duck-typed keeps this module import-free of the pipeline layer.
+    Pure and traceable: the PipelineEngine composes it with the estimation
+    and error stages inside ONE jitted executable. ``method='norms_only'``
+    is the sketch-free LELA first pass (the key is unused).
+    """
+    if spec.method == "norms_only":
+        return norms_only_summary(A, B)
+    return build_summary(key, A, B, spec.k, method=spec.method,
+                         backend=spec.backend, block=spec.block,
+                         precision=spec.precision, probes=spec.probes)
+
+
 # ---------------------------------------------------------------------------
 # Structured-product summaries (engine-owned; no caller builds these by hand)
 # ---------------------------------------------------------------------------

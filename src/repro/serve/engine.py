@@ -3,13 +3,13 @@
 ``Engine``       — LM serving: preallocated KV caches, prefill + jitted
                    decode loop, greedy or temperature sampling.
 ``SketchService`` — sketch serving: shape-bucketed micro-batching front-end
-                   for one-pass (A, B) requests. ``flush()`` returns each
-                   request's summary; ``flush_factors(r)`` runs the full
-                   two-engine pipeline (SummaryEngine sketch, then
-                   EstimationEngine completion) and returns each request's
-                   top-r factors of A^T B — each shape bucket is ONE batched
-                   ``build_summary`` dispatch chained into ONE batched
-                   ``estimate_product`` dispatch.
+                   for one-pass (A, B) requests, rebuilt on the
+                   compile-once ``core.pipeline.PipelineEngine``: every
+                   shape bucket runs one plan-compiled fused executable
+                   (summary -> estimation -> error in a single dispatch),
+                   cached across flushes, so repeat-shape traffic never
+                   re-traces. ``flush()`` returns each request's summary;
+                   ``flush_factors(r)`` the top-r factors of each A^T B.
 """
 from __future__ import annotations
 
@@ -20,9 +20,8 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.estimation_engine import estimate_product
+from repro.core import pipeline
 from repro.core.streaming import StreamingSummarizer, StreamState
-from repro.core.summary_engine import build_summary
 from repro.core.types import ErrorEstimate, LowRankFactors, SketchSummary
 from repro.models.factory import Model
 
@@ -86,9 +85,11 @@ class SketchService:
     their own (A, B) pair (per-layer gradients, per-tenant co-occurrence
     shards, ...). Dispatching them one by one wastes accelerator launches;
     ``SketchService`` queues requests, buckets them by shape, and flushes each
-    bucket as ONE batched ``build_summary`` dispatch (the engine's vmapped
-    mode), preserving per-request keys — results are bit-identical to
-    dispatching each request alone.
+    bucket through ONE plan-compiled executable from the shared
+    ``PipelineEngine`` cache (the engine's batched/vmapped mode), preserving
+    per-request keys — results are bit-identical to dispatching each request
+    alone, and a warm plan (repeat shapes) is one cache lookup + one fused
+    dispatch per bucket, zero retraces.
 
     Two request styles share the service:
 
@@ -125,22 +126,34 @@ class SketchService:
 
     def __init__(self, k: int = 128, *, method: str = "gaussian",
                  backend: str = "scan", block: int = 1024,
-                 precision: Optional[str] = None, probes: int = 0):
+                 precision: Optional[str] = None, probes: int = 0,
+                 engine: Optional[pipeline.PipelineEngine] = None):
         self.k = k
         self.method = method
         self.backend = backend
         self.block = block
         self.precision = precision
         self.probes = probes
+        self.engine = engine if engine is not None else pipeline.get_engine()
         self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array]] = []
         self._next_ticket = 0
         self._streams: Dict[int, _StreamSession] = {}
         self._next_stream = 0
 
     def submit(self, key: jax.Array, A: jax.Array, B: jax.Array) -> int:
-        """Queue one (A, B) pair under its own key; returns a ticket."""
-        assert A.ndim == 2 and B.ndim == 2 and A.shape[0] == B.shape[0], \
-            (A.shape, B.shape)
+        """Queue one (A, B) pair under its own key; returns a ticket.
+
+        Raises ``ValueError`` (never a strippable ``assert``) on
+        non-2-D inputs or mismatched streamed row dimensions.
+        """
+        if jnp.ndim(A) != 2 or jnp.ndim(B) != 2:
+            raise ValueError(
+                f"submit expects 2-D (d, n) matrices, got A with shape "
+                f"{jnp.shape(A)} and B with shape {jnp.shape(B)}")
+        if A.shape[0] != B.shape[0]:
+            raise ValueError(
+                f"A and B must share the streamed row dimension d, got "
+                f"A with shape {A.shape} vs B with shape {B.shape}")
         ticket = self._next_ticket
         self._next_ticket += 1
         self._queue.append((ticket, key, A, B))
@@ -163,23 +176,28 @@ class SketchService:
         self._queue = []
         return buckets
 
-    def _stack_and_sketch(self, requests):
-        """Stack one bucket's requests and run the batched step-1 dispatch.
-        Returns (tickets, keys, A, B, batched summaries)."""
+    def _stack(self, requests):
+        """Stack one bucket's requests for the batched/vmapped mode.
+        Returns (tickets, key stack, A stack, B stack)."""
         tickets = [req[0] for req in requests]
         keys = jnp.stack([req[1] for req in requests])
         A = jnp.stack([req[2] for req in requests])
         B = jnp.stack([req[3] for req in requests])
-        summaries = build_summary(
-            keys, A, B, self.k, method=self.method, backend=self.backend,
+        return tickets, keys, A, B
+
+    def _sketch_spec(self) -> pipeline.SketchSpec:
+        """The service's step-1 configuration as a declarative plan stage."""
+        return pipeline.SketchSpec(
+            method=self.method, backend=self.backend, k=self.k,
             block=self.block, precision=self.precision, probes=self.probes)
-        return tickets, keys, A, B, summaries
 
     def flush(self) -> Dict[int, SketchSummary]:
-        """One batched SummaryEngine dispatch per bucket; drains the queue."""
+        """One cached batched summary executable per bucket; drains the
+        queue."""
         out: Dict[int, SketchSummary] = {}
         for requests in self._drain_buckets().values():
-            tickets, _, _, _, batched = self._stack_and_sketch(requests)
+            tickets, keys, A, B = self._stack(requests)
+            batched = self.engine.summarize(self._sketch_spec(), keys, A, B)
             for i, ticket in enumerate(tickets):
                 out[ticket] = jax.tree.map(lambda x: x[i], batched)
         return out
@@ -189,20 +207,25 @@ class SketchService:
                       T: int = 6, est_method: str = "rescaled_jl",
                       est_backend: str = "jit", use_splits: bool = False,
                       with_error: bool = False) -> Dict[int, "ServedEstimate"]:
-        """The sketch->estimate pipeline: per shape bucket, one batched
-        ``build_summary`` dispatch feeds one batched ``estimate_product``
-        dispatch, and each request gets the top-r factors of its A^T B
-        (plus the summary, for callers that also want the side information).
+        """The sketch->estimate pipeline: per shape bucket, ONE plan-compiled
+        fused executable (batched summary + estimation + optional error in a
+        single dispatch, cached across flushes), and each request gets the
+        top-r factors of its A^T B (plus the summary, for callers that also
+        want the side information).
 
         Rank selection is either fixed (``r=<int>``) or quality-gated:
-        ``r='auto'`` with ``tol=<relative Frobenius error>`` starts each
-        bucket at a small rank and escalates (doubling, one batched dispatch
-        per escalation) until every request's a-posteriori error estimate
-        meets ``tol`` or ``r_max`` is reached — the knob that lets callers
-        trade rank for error instead of guessing. Quality-gated (and
-        ``with_error=True``) serving needs a probe-carrying service
-        (``SketchService(probes=p)``); each ``ServedEstimate.error`` then
-        reports the ErrorEngine estimate the gate used.
+        ``r='auto'`` with ``tol=<relative Frobenius error>`` reads each
+        bucket's per-rank error curve ONCE (a single fused summary+SVD-sweep
+        dispatch — the ``adaptive_rank`` factorization) to fast-forward the
+        doubling schedule past ranks that provably fail for some request
+        (capped at ``r_max``), then gates on the *served* factors'
+        a-posteriori estimate — escalating further only if the curve was
+        optimistic about the completion method — so every request's
+        ``ServedEstimate.error`` meets ``tol`` whenever a rank within the
+        cap can. The common case is one estimation dispatch per bucket
+        instead of a dispatch + blocking host sync per doubling round.
+        Quality-gated (and ``with_error=True``) serving needs a
+        probe-carrying service (``SketchService(probes=p)``).
 
         Each request's estimation key is ``fold_in(request key, 1)`` — a
         fixed derivation from the key the caller submitted, so results are
@@ -211,24 +234,20 @@ class SketchService:
         exact second pass (the service holds them anyway while queueing).
         """
         gated = self._check_gate(r, tol, with_error)
+        plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
+                          m=m, T=T, est_method=est_method,
+                          est_backend=est_backend, use_splits=use_splits,
+                          with_error=with_error, gated=gated)
         out: Dict[int, ServedEstimate] = {}
         for requests in self._drain_buckets().values():
-            tickets, keys, A, B, summaries = self._stack_and_sketch(requests)
-            est_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys)
-            exact = (A, B) if est_method == "lela_waltmin" else None
-            kw = dict(method=est_method, backend=est_backend, m=m, T=T,
-                      use_splits=use_splits, exact_pair=exact)
-            if gated:
-                ests = self._escalate(est_keys, summaries, tol, r_max, **kw)
-            else:
-                ests = estimate_product(est_keys, summaries, r,
-                                        with_error=with_error, **kw)
+            tickets, keys, A, B = self._stack(requests)
+            res = self.engine.run(plan, keys, A, B)
             for i, ticket in enumerate(tickets):
                 out[ticket] = ServedEstimate(
-                    jax.tree.map(lambda x: x[i], summaries),
-                    jax.tree.map(lambda x: x[i], ests.factors),
-                    error=(None if ests.error is None else
-                           jax.tree.map(lambda x: x[i], ests.error)))
+                    jax.tree.map(lambda x: x[i], res.summary),
+                    jax.tree.map(lambda x: x[i], res.estimate.factors),
+                    error=(None if res.estimate.error is None else
+                           jax.tree.map(lambda x: x[i], res.estimate.error)))
         return out
 
     def _check_gate(self, r, tol, with_error) -> bool:
@@ -246,23 +265,19 @@ class SketchService:
                 "service — construct SketchService(probes=p)")
         return gated
 
-    def _escalate(self, est_keys, summaries, tol: float,
-                  r_max: Optional[int], **kw):
-        """Escalate the bucket's rank (doubling; one batched dispatch per
-        round) until every request's estimated relative error meets ``tol``
-        or ``r_max`` is hit — the estimate is re-read per round from the same
-        probe block, never from a fresh pass over the data."""
-        n1 = int(summaries.A_sketch.shape[-1])
-        n2 = int(summaries.B_sketch.shape[-1])
-        cap = min(n1, n2, self.k)
-        r_cap = cap if r_max is None else min(r_max, cap)
-        r = min(4, r_cap)
-        while True:
-            ests = estimate_product(est_keys, summaries, r, with_error=True,
-                                    **kw)
-            if float(jnp.max(ests.error.rel_est)) <= tol or r >= r_cap:
-                return ests
-            r = min(2 * r, r_cap)
+    def _plan(self, *, r, tol, r_max, m, T, est_method, est_backend,
+              use_splits, with_error, gated) -> pipeline.PipelinePlan:
+        """One flush/stream request as a declarative plan (the executable-
+        cache key). Gate-only knobs are normalized away on the fixed-rank
+        path so equivalent requests share cache entries."""
+        rank = (pipeline.RankPolicy(r=None, tol=tol, r_max=r_max) if gated
+                else pipeline.RankPolicy(r=r))
+        return pipeline.PipelinePlan(
+            sketch=self._sketch_spec(),
+            estimation=pipeline.EstimationSpec(
+                method=est_method, backend=est_backend, m=m, T=T,
+                use_splits=use_splits),
+            rank=rank, key_layout="service", with_error=with_error)
 
     # -- streaming accumulator sessions ------------------------------------
 
@@ -352,24 +367,21 @@ class SketchService:
                        use_splits: bool = False,
                        with_error: bool = False) -> ServedEstimate:
         """``flush_factors`` against the live accumulator: finalize the
-        session's state and run the estimation pipeline with the same
-        per-request key derivation (``fold_in(session key, 1)``) — a stream
-        fed chunk-by-chunk yields the same factors as the equivalent one-shot
+        session's state and run the same compiled estimation path
+        (``PipelineEngine.run_from_summary``) with the same per-request key
+        derivation (``fold_in(session key, 1)``) — a stream fed
+        chunk-by-chunk yields the same factors as the equivalent one-shot
         ``submit`` + ``flush_factors`` request. The same quality-gated mode
-        is available: ``r='auto'`` with ``tol=`` escalates this session's
-        rank until its a-posteriori estimate passes (needs
-        ``SketchService(probes=p)``)."""
+        is available: ``r='auto'`` with ``tol=`` gates this session's rank
+        on its one-sweep error curve (needs ``SketchService(probes=p)``)."""
         gated = self._check_gate(r, tol, with_error)
+        plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
+                          m=m, T=T, est_method=est_method,
+                          est_backend=est_backend, use_splits=use_splits,
+                          with_error=with_error, gated=gated)
         sess = self._streams[stream_id]
         summary = sess.summarizer.finalize(sess.state)
-        est_key = jax.random.fold_in(sess.key, 1)
-        kw = dict(method=est_method, backend=est_backend, m=m, T=T,
-                  use_splits=use_splits)
-        if gated:
-            est = self._escalate(est_key, summary, tol, r_max, **kw)
-        else:
-            est = estimate_product(est_key, summary, r,
-                                   with_error=with_error, **kw)
+        est = self.engine.run_from_summary(plan, sess.key, summary)
         return ServedEstimate(summary, est.factors, error=est.error)
 
     def close_stream(self, stream_id: int) -> StreamState:

@@ -148,6 +148,56 @@ def test_sketch_service_key_tree(key):
                                   np.asarray(manual.factors.U))
 
 
+def test_pipeline_plan_key_tree(key):
+    """The plan-compiled path consumes exactly the frozen key tree: the
+    smppca/sketch_svd presets and the service layout, executed through a
+    PipelineEngine's fused executables, reproduce the stage-by-stage
+    compositions built from the golden key literals bit-for-bit."""
+    from repro.core import pipeline
+    A = jax.random.normal(key, (96, 10))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (96, 8))
+    eng = pipeline.PipelineEngine()
+
+    # smppca preset: sketch key = split3[0], estimation key = fold(split3[1])
+    res = eng.run(pipeline.smppca_plan(r=2, k=16, m=200, T=2), key, A, B)
+    summary = summary_engine.build_summary(
+        jnp.asarray(SMPPCA_SPLIT3[0], jnp.uint32), A, B, 16)
+    manual = estimation_engine.estimate_product(
+        jnp.asarray(SMPPCA_EST_KEY, jnp.uint32), summary, 2, m=200, T=2)
+    np.testing.assert_array_equal(np.asarray(res.estimate.factors.U),
+                                  np.asarray(manual.factors.U))
+
+    # sketch_svd preset: (sketch key, power key) = the single split
+    res = eng.run(pipeline.sketch_svd_plan(r=2, k=16), key, A, B)
+    k_sketch, k_pow = (jnp.asarray(k, jnp.uint32) for k in SPLIT2)
+    summary = summary_engine.build_summary(k_sketch, A, B, 16)
+    manual = estimation_engine.estimate_product(
+        k_pow, summary, 2, method="direct_svd")
+    np.testing.assert_array_equal(np.asarray(res.estimate.factors.U),
+                                  np.asarray(manual.factors.U))
+
+    # service layout from a summary (the stream_factors spine): estimation
+    # key = fold_in(key, 1), frozen as SERVICE_EST_KEY
+    summary = summary_engine.build_summary(key, A, B, 16)
+    plan = pipeline.PipelinePlan(
+        sketch=pipeline.SketchSpec(k=16),
+        estimation=pipeline.EstimationSpec(m=200, T=2),
+        rank=pipeline.RankPolicy(r=2), key_layout="service")
+    est = eng.run_from_summary(plan, key, summary)
+    manual = estimation_engine.estimate_product(
+        jnp.asarray(SERVICE_EST_KEY, jnp.uint32), summary, 2, m=200, T=2)
+    np.testing.assert_array_equal(np.asarray(est.factors.U),
+                                  np.asarray(manual.factors.U))
+
+    # the derivation helper itself is pinned to the same literals
+    _eq(pipeline.derive_keys("service", key)[1], SERVICE_EST_KEY)
+    _eq(pipeline.derive_keys("smppca", key)[0], SMPPCA_SPLIT3[0])
+    _eq(pipeline.derive_keys("smppca", key)[1], SMPPCA_EST_KEY)
+    _eq(pipeline.derive_keys("sketch_svd", key)[0], SPLIT2[0])
+    _eq(pipeline.derive_keys("sketch_svd", key)[1], SPLIT2[1])
+    _eq(pipeline.derive_keys("direct", key)[1], KEY0)
+
+
 def test_probe_key_tree(key):
     """The ErrorEngine's reserved two-level probe fold is frozen, and
     build_summary's retained probe_omega is drawn from exactly that key."""

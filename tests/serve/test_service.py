@@ -1,0 +1,83 @@
+"""SketchService request validation + compiled-path behavior.
+
+The submit() guards must be real ``ValueError``s (a bare ``assert`` is
+stripped under ``python -O``, letting malformed requests corrupt a whole
+bucket at stack time), and streaming sessions must ride the same warm
+executable cache as one-shot flushes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineEngine
+from repro.serve.engine import SketchService
+
+from tests.conftest import gaussian_pair
+
+
+def test_submit_rejects_non_2d_inputs(key):
+    svc = SketchService(k=8, backend="scan", block=32)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    with pytest.raises(ValueError, match=r"2-D.*\(64, 6, 1\)"):
+        svc.submit(key, A[..., None], B)          # 3-D A
+    with pytest.raises(ValueError, match="2-D"):
+        svc.submit(key, A, B[:, 0])               # 1-D B
+    assert svc.pending == 0                       # nothing was queued
+
+
+def test_submit_rejects_mismatched_row_dimension(key):
+    svc = SketchService(k=8, backend="scan", block=32)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    with pytest.raises(ValueError,
+                       match=r"row dimension.*\(64, 6\).*\(32, 5\)"):
+        svc.submit(key, A, B[:32])
+    assert svc.pending == 0
+    assert isinstance(svc.submit(key, A, B), int)  # valid request still works
+
+
+def test_stream_factors_shares_warm_executables(key):
+    """Two sessions with the same shapes/args share one compiled from-summary
+    executable: the second stream_factors call traces nothing."""
+    eng = PipelineEngine()
+    svc = SketchService(k=8, backend="scan", block=32, engine=eng)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    sid = svc.open_stream(key, 64, 6, 5)
+    svc.append(sid, A, B)
+    first = svc.stream_factors(sid, r=2, m=100, T=2)
+    traces0 = eng.stats.traces
+    sid2 = svc.open_stream(jax.random.fold_in(key, 1), 64, 6, 5)
+    svc.append(sid2, A, B)
+    second = svc.stream_factors(sid2, r=2, m=100, T=2)
+    assert eng.stats.traces == traces0            # warm: zero new traces
+    assert eng.stats.hits >= 1
+    assert first.factors.U.shape == second.factors.U.shape
+    # different keys -> different sampled completions (sanity, not parity)
+    assert not np.array_equal(np.asarray(first.factors.U),
+                              np.asarray(second.factors.U))
+
+
+def test_flush_and_flush_factors_share_summary_randomness(key):
+    """flush() (summary-only executable) and flush_factors() (fused
+    executable) agree bit-for-bit on the summary for the same request."""
+    eng = PipelineEngine()
+    svc = SketchService(k=8, backend="scan", block=32, engine=eng)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    t0 = svc.submit(key, A, B)
+    summary = svc.flush()[t0]
+    t1 = svc.submit(key, A, B)
+    served = svc.flush_factors(r=2, m=100, T=2)[t1]
+    for name in ("A_sketch", "B_sketch", "norm_A", "norm_B"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(summary, name)),
+            np.asarray(getattr(served.summary, name)))
+
+
+def test_default_engine_is_shared_across_services(key):
+    """Unpinned services share the process-default engine, so one service's
+    warm plans serve another's identical traffic."""
+    from repro.core import pipeline
+    a = SketchService(k=8, backend="scan", block=32)
+    b = SketchService(k=8, backend="scan", block=32)
+    assert a.engine is b.engine is pipeline.get_engine()
+    c = SketchService(k=8, backend="scan", block=32,
+                      engine=PipelineEngine(max_entries=4))
+    assert c.engine is not a.engine

@@ -19,7 +19,7 @@ def _load_check_docs():
 def test_docs_exist_and_linked_from_readme():
     readme = (REPO / "README.md").read_text()
     for doc in ("docs/architecture.md", "docs/paper_map.md",
-                "docs/streaming.md"):
+                "docs/streaming.md", "docs/pipeline.md"):
         assert (REPO / doc).exists(), doc
         assert doc in readme, f"README does not link {doc}"
 
