@@ -17,8 +17,14 @@ estimated-vs-true residual across rank x probe-count cells plus the
 cold-vs-warm ``SketchService`` plans through the compile-once
 PipelineEngine (per-request latency, trace counts, executable-cache hits
 for fixed-rank, with-error, and quality-gated plans) — and writes
-``BENCH_serving.json`` (``--out-serving``); ``--smoke`` shrinks sizes
-for CI.
+``BENCH_serving.json`` (``--out-serving``). ``--suite traffic`` runs the
+``traffic_sweep`` — Poisson arrivals x shape-mix x tenant-mix through the
+continuously-batched ``ServingLoop`` (requests/sec, p50/p99 latency, batch
+occupancy, shed rate) — and merges its report into the same
+``BENCH_serving.json`` under the ``"traffic"`` key. Every suite stamps a
+``meta`` block (git sha, jax version, backend, smoke flag) into its JSON so
+``tools/bench_compare.py`` can refuse cross-backend comparisons;
+``--smoke`` shrinks sizes for CI.
 
 Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
 spectrum-matched synthetic stand-ins validate the paper's *relative* claims
@@ -30,6 +36,8 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+import subprocess
 import time
 import zlib
 
@@ -38,6 +46,26 @@ import jax.numpy as jnp
 
 from repro import core
 from repro.core import estimator as est
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _meta(smoke: bool) -> dict:
+    """Provenance block every BENCH_*.json carries: which commit, which jax,
+    which device backend, and whether sizes were smoke-reduced. This is what
+    lets tools/bench_compare.py refuse apples-to-oranges comparisons."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO, text=True,
+            capture_output=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "smoke": bool(smoke),
+    }
 
 
 def _timed(fn, *args, reps=1, **kw):
@@ -365,6 +393,7 @@ def estimation_backends(key, *, smoke: bool = False) -> dict:
     times = {rec["name"]: rec["us_per_call"] for rec in results}
     return {
         "suite": "estimation_backends",
+        "meta": _meta(smoke),
         "config": {"d": d, "n": n, "r": r, "k": k, "m": m, "T": T,
                    "smoke": smoke, "backend_platform": jax.default_backend()},
         "baseline": baseline,
@@ -450,6 +479,7 @@ def streaming_sweep(key, *, smoke: bool = False) -> dict:
 
     return {
         "suite": "streaming",
+        "meta": _meta(smoke),
         "config": {"d": d, "n": n, "k": k, "chunks": list(chunks),
                    "smoke": smoke, "backend_platform": jax.default_backend()},
         "results": results,
@@ -515,6 +545,7 @@ def error_sweep(key, *, smoke: bool = False) -> dict:
     ratios = [rec["ratio_est_over_true"] for rec in results]
     return {
         "suite": "error",
+        "meta": _meta(smoke),
         "config": {"d": d, "n": n, "k": k, "T": T, "ranks": list(ranks),
                    "probe_counts": list(probe_counts), "smoke": smoke,
                    "backend_platform": jax.default_backend()},
@@ -586,11 +617,56 @@ def serving_sweep(key, *, smoke: bool = False) -> dict:
         })
     return {
         "suite": "serving",
+        "meta": _meta(smoke),
         "config": {"d": d, "n": n, "k": k, "L": L, "probes": probes, "m": m,
                    "warm_reps": warm_reps, "smoke": smoke,
                    "backend_platform": jax.default_backend()},
         "results": results,
         "max_traces_warm": max(rec["traces_warm"] for rec in results),
+    }
+
+
+def traffic_sweep(*, smoke: bool = False) -> dict:
+    """Measured-throughput traffic cells through the ServingLoop.
+
+    Four regimes of the same continuously-batched stack (see
+    ``repro.serve.traffic``): a single-shape steady state, a mixed-shape
+    mix (three buckets batching independently), a multi-tenant mix (many
+    tenants, one shared warm cache), and an overload cell (4x the
+    calibrated rate into a bounded queue — the backpressure/shedding
+    path). The records the acceptance gate reads: steady-state cells must
+    show ``occupancy`` > 1 request/dispatch with ``traces_steady`` == 0.
+    """
+    from repro.serve.traffic import TrafficConfig, run_traffic
+    if smoke:
+        base = dict(n_requests=48, k=32, m=400, T=2, max_batch=4,
+                    target_occupancy=3.0, pairs_per_shape=2)
+        s1, s2, s3 = (256, 16, 12), (256, 24, 16), (384, 16, 16)
+    else:
+        base = dict(n_requests=256, k=64, m=1200, T=3, max_batch=8,
+                    target_occupancy=4.0, pairs_per_shape=4)
+        s1, s2, s3 = (2048, 64, 48), (2048, 96, 64), (3072, 64, 64)
+    cells = [
+        TrafficConfig(name="steady_single_shape", shapes=(s1,), **base),
+        TrafficConfig(name="mixed_shapes", shapes=(s1, s2, s3), **base),
+        TrafficConfig(name="multi_tenant", shapes=(s1,),
+                      tenants=("acme", "globex", 7, None), **base),
+        TrafficConfig(name="overload_shed", shapes=(s1,), rate_x=4.0,
+                      max_queue=2 * base["max_batch"], **base),
+    ]
+    results = [run_traffic(cfg) for cfg in cells]
+    steady = [rec for rec in results if rec["name"] != "overload_shed"]
+    return {
+        "suite": "traffic",
+        "meta": _meta(smoke),
+        "config": {"smoke": smoke,
+                   "backend_platform": jax.default_backend()},
+        "results": results,
+        "min_steady_occupancy": min(rec["occupancy"] for rec in steady),
+        "max_traces_steady": max(rec["traces_steady"] for rec in results),
+        "overload_shed_rate": next(
+            rec["shed_rate"] for rec in results
+            if rec["name"] == "overload_shed"),
     }
 
 
@@ -670,6 +746,37 @@ def run_serving_suite(key, out_path: str, smoke: bool) -> None:
     print(f"max_traces_warm,{report['max_traces_warm']}", flush=True)
 
 
+def run_traffic_suite(out_path: str, smoke: bool) -> None:
+    """Run the traffic sweep and MERGE it into the serving artifact: the
+    serving sweep (cold/warm plan latency) and the traffic sweep (measured
+    throughput) are two views of the same stack and share one
+    ``BENCH_serving.json``, under the ``"traffic"`` key."""
+    report = traffic_sweep(smoke=smoke)
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    if not merged:
+        merged = {"suite": "serving", "meta": report["meta"]}
+    merged["traffic"] = report
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"wrote {out_path} (traffic)", flush=True)
+    print("name,offered_rps,measured_rps,p50_ms,p99_ms,occupancy,"
+          "shed_rate,traces_steady")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['offered_rps']:.1f},"
+              f"{rec['measured_rps']:.1f},{rec['p50_ms']:.1f},"
+              f"{rec['p99_ms']:.1f},{rec['occupancy']:.2f},"
+              f"{rec['shed_rate']:.3f},{rec['traces_steady']}", flush=True)
+    print(f"min_steady_occupancy,{report['min_steady_occupancy']:.2f}",
+          flush=True)
+    print(f"max_traces_steady,{report['max_traces_steady']}", flush=True)
+
+
 def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
     report = streaming_sweep(jax.random.fold_in(
         key, zlib.crc32(b"streaming") % 2**31), smoke=smoke)
@@ -688,7 +795,7 @@ def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite",
                    choices=("paper", "estimation", "streaming", "error",
-                            "serving", "all"),
+                            "serving", "traffic", "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
@@ -712,6 +819,8 @@ def main() -> None:
         run_error_suite(key, args.out_error, args.smoke)
     if args.suite in ("serving", "all"):
         run_serving_suite(key, args.out_serving, args.smoke)
+    if args.suite in ("traffic", "all"):
+        run_traffic_suite(args.out_serving, args.smoke)
 
 
 if __name__ == "__main__":

@@ -58,7 +58,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+import zlib
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -71,6 +72,10 @@ LAYOUTS = ("service", "smppca", "sketch_svd", "direct")
 
 # historical start rank of the quality-gated doubling schedule
 _R0 = 4
+
+# reserved tenant-namespace fold tag ("tnt!") — like the ErrorEngine's probe
+# tag, the two-level fold cannot collide with any per-row single fold_in
+_TENANT_TAG = 0x746E7421
 
 
 class SketchSpec(NamedTuple):
@@ -169,14 +174,57 @@ class EngineStats:
     curve_dispatches: int = 0  # dispatches of a rank-curve executable
 
 
-def derive_keys(layout: str, key: jax.Array, *, batched: bool = False):
+def tenant_id(tenant: Union[int, str]) -> int:
+    """Canonical uint31 id for a tenant handle (int passed through, str
+    hashed) — the value ``tenant_key`` folds into the key derivation.
+
+    Ints must already sit in the fold_in range [0, 2^31); strings map
+    through crc32 (stable across processes and Python versions, unlike
+    ``hash``) masked into the same range.
+    """
+    if isinstance(tenant, bool) or not isinstance(tenant, (int, str)):
+        raise TypeError(f"tenant must be an int or str, got {tenant!r}")
+    if isinstance(tenant, str):
+        return zlib.crc32(tenant.encode()) & 0x7FFFFFFF
+    if not 0 <= tenant < 2 ** 31:
+        raise ValueError(f"int tenant ids must be in [0, 2**31), got {tenant}")
+    return tenant
+
+
+def tenant_key(key: jax.Array, tenant: Union[int, str]) -> jax.Array:
+    """Namespace a caller key under a tenant: the reserved two-level fold
+    ``fold_in(fold_in(key, 0x746E7421), tenant_id(tenant))``.
+
+    This is how many tenants share one warm ``PipelineEngine`` executable
+    cache without randomness collisions: the fold happens BEFORE the
+    layout fan-out (so every downstream sketch/estimation/probe key is
+    namespaced), it changes only key *values* — never shapes, plans, or
+    executables — and the reserved tag keeps two tenants submitting the
+    same user key bit-independent of each other and of every non-tenant
+    derivation. Golden-tested in tests/core/test_key_contract.py.
+    """
+    return jax.random.fold_in(
+        jax.random.fold_in(key, _TENANT_TAG), tenant_id(tenant))
+
+
+def derive_keys(layout: str, key: jax.Array, *, batched: bool = False,
+                tenant: Optional[Union[int, str]] = None):
     """(sketch key, estimation key) under a fixed layout — pure/traceable.
 
     The ONE place the plan-path key fan-out lives; every derivation is the
     frozen historical one, golden-tested in tests/core/test_key_contract.py.
     Batched mode (a stacked key per pair) is a 'service' notion: the other
-    layouts take exactly one caller key.
+    layouts take exactly one caller key. ``tenant`` (if given) namespaces
+    the caller key through ``tenant_key`` before the fan-out — ``None``
+    (the default) leaves every historical derivation bit-identical. The
+    serving scheduler folds per-request tenants host-side before stacking,
+    which lands on exactly this derivation.
     """
+    if tenant is not None:
+        if batched:
+            key = jax.vmap(lambda kk: tenant_key(kk, tenant))(key)
+        else:
+            key = tenant_key(key, tenant)
     if layout == "service":
         if batched:
             return key, jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(key)

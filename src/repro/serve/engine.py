@@ -2,28 +2,35 @@
 
 ``Engine``       — LM serving: preallocated KV caches, prefill + jitted
                    decode loop, greedy or temperature sampling.
-``SketchService`` — sketch serving: shape-bucketed micro-batching front-end
-                   for one-pass (A, B) requests, rebuilt on the
-                   compile-once ``core.pipeline.PipelineEngine``: every
-                   shape bucket runs one plan-compiled fused executable
-                   (summary -> estimation -> error in a single dispatch),
-                   cached across flushes, so repeat-shape traffic never
-                   re-traces. ``flush()`` returns each request's summary;
+``SketchService`` — sketch serving: a thin synchronous adapter over the
+                   continuously-batched ``serve.scheduler.ServingLoop``.
+                   ``submit``/``flush`` keep their historical bit-exact
+                   semantics (each shape bucket is ONE plan-compiled fused
+                   dispatch through the compile-once
+                   ``core.pipeline.PipelineEngine`` cache), while the loop
+                   underneath adds admission control, SLO deadlines,
+                   backpressure/load-shedding and multi-tenant key
+                   namespacing for async callers (see docs/serving.md).
+                   ``flush()`` returns each request's summary;
                    ``flush_factors(r)`` the top-r factors of each A^T B.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline
 from repro.core.streaming import StreamingSummarizer, StreamState
-from repro.core.types import ErrorEstimate, LowRankFactors, SketchSummary
+from repro.core.types import SketchSummary
 from repro.models.factory import Model
+from repro.serve.scheduler import (
+    PipelineWork, ServedEstimate, ServeFuture, ServingLoop, SummaryWork,
+    as_served)
+
+__all__ = ["Engine", "ServeConfig", "SketchService", "ServedEstimate"]
 
 
 @dataclasses.dataclass
@@ -84,12 +91,17 @@ class SketchService:
     Serving scenario: many concurrent callers each need the step-1 summary of
     their own (A, B) pair (per-layer gradients, per-tenant co-occurrence
     shards, ...). Dispatching them one by one wastes accelerator launches;
-    ``SketchService`` queues requests, buckets them by shape, and flushes each
-    bucket through ONE plan-compiled executable from the shared
+    ``SketchService`` queues requests and flushes them through a
+    ``ServingLoop`` — the scheduler buckets them by shape and each bucket
+    dispatches as ONE plan-compiled executable from the shared
     ``PipelineEngine`` cache (the engine's batched/vmapped mode), preserving
     per-request keys — results are bit-identical to dispatching each request
     alone, and a warm plan (repeat shapes) is one cache lookup + one fused
-    dispatch per bucket, zero retraces.
+    dispatch per bucket, zero retraces. ``submit(..., tenant=)`` namespaces
+    a request's randomness under a tenant id (``pipeline.tenant_key``)
+    without splitting the warm executable cache; async callers wanting
+    continuous batching, deadlines and load-shedding can drive the
+    ``ServingLoop`` directly (``service.loop``, docs/serving.md).
 
     Two request styles share the service:
 
@@ -127,24 +139,41 @@ class SketchService:
     def __init__(self, k: int = 128, *, method: str = "gaussian",
                  backend: str = "scan", block: int = 1024,
                  precision: Optional[str] = None, probes: int = 0,
-                 engine: Optional[pipeline.PipelineEngine] = None):
+                 engine: Optional[pipeline.PipelineEngine] = None,
+                 loop: Optional[ServingLoop] = None):
         self.k = k
         self.method = method
         self.backend = backend
         self.block = block
         self.precision = precision
         self.probes = probes
-        self.engine = engine if engine is not None else pipeline.get_engine()
-        self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array]] = []
+        if loop is not None and engine is not None and \
+                loop.engine is not engine:
+            raise ValueError(
+                "pass engine= OR loop=, not a loop pinned to a different "
+                "engine — the service dispatches through loop.engine")
+        self.loop = loop if loop is not None else ServingLoop(engine=engine)
+        self.engine = self.loop.engine
+        self._queue: List[Tuple[int, jax.Array, jax.Array, jax.Array,
+                                Optional[Union[int, str]],
+                                Optional[float]]] = []
         self._next_ticket = 0
         self._streams: Dict[int, _StreamSession] = {}
         self._next_stream = 0
 
-    def submit(self, key: jax.Array, A: jax.Array, B: jax.Array) -> int:
+    def submit(self, key: jax.Array, A: jax.Array, B: jax.Array, *,
+               tenant: Optional[Union[int, str]] = None,
+               deadline: Optional[float] = None) -> int:
         """Queue one (A, B) pair under its own key; returns a ticket.
 
-        Raises ``ValueError`` (never a strippable ``assert``) on
-        non-2-D inputs or mismatched streamed row dimensions.
+        ``tenant`` namespaces the request's randomness under a tenant id
+        (folded via ``pipeline.tenant_key`` at dispatch; None preserves
+        the historical key derivation bit-for-bit). ``deadline`` is the
+        request's SLO budget in seconds, honored when the underlying
+        ``ServingLoop`` is polled asynchronously (a synchronous ``flush``
+        dispatches everything regardless). Raises ``ValueError`` (never a
+        strippable ``assert``) on non-2-D inputs or mismatched streamed
+        row dimensions.
         """
         if jnp.ndim(A) != 2 or jnp.ndim(B) != 2:
             raise ValueError(
@@ -156,34 +185,22 @@ class SketchService:
                 f"A with shape {A.shape} vs B with shape {B.shape}")
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((ticket, key, A, B))
+        self._queue.append((ticket, key, A, B, tenant, deadline))
         return ticket
 
     @property
     def pending(self) -> int:
         return len(self._queue)
 
-    def _drain_buckets(self):
-        """Group queued requests by shape+dtype signature and clear the queue.
-        Buckets key on shapes AND dtypes (of A, B, and the key) so stacking
-        never promotes a request's arrays — results stay identical to solo
-        dispatches."""
-        buckets = collections.defaultdict(list)
-        for ticket, key, A, B in self._queue:
-            sig = (A.shape, str(A.dtype), B.shape, str(B.dtype),
-                   key.shape, str(key.dtype))
-            buckets[sig].append((ticket, key, A, B))
+    def _enqueue(self, work) -> Dict[int, ServeFuture]:
+        """Hand the queued requests to the serving loop under one work spec
+        (flush decides summary-only vs full-pipeline at flush time)."""
+        futures = {}
+        for ticket, key, A, B, tenant, deadline in self._queue:
+            futures[ticket] = self.loop.submit(
+                key, A, B, work=work, tenant=tenant, deadline=deadline)
         self._queue = []
-        return buckets
-
-    def _stack(self, requests):
-        """Stack one bucket's requests for the batched/vmapped mode.
-        Returns (tickets, key stack, A stack, B stack)."""
-        tickets = [req[0] for req in requests]
-        keys = jnp.stack([req[1] for req in requests])
-        A = jnp.stack([req[2] for req in requests])
-        B = jnp.stack([req[3] for req in requests])
-        return tickets, keys, A, B
+        return futures
 
     def _sketch_spec(self) -> pipeline.SketchSpec:
         """The service's step-1 configuration as a declarative plan stage."""
@@ -193,14 +210,12 @@ class SketchService:
 
     def flush(self) -> Dict[int, SketchSummary]:
         """One cached batched summary executable per bucket; drains the
-        queue."""
-        out: Dict[int, SketchSummary] = {}
-        for requests in self._drain_buckets().values():
-            tickets, keys, A, B = self._stack(requests)
-            batched = self.engine.summarize(self._sketch_spec(), keys, A, B)
-            for i, ticket in enumerate(tickets):
-                out[ticket] = jax.tree.map(lambda x: x[i], batched)
-        return out
+        queue. An empty queue returns ``{}`` without touching the engine."""
+        if not self._queue:
+            return {}
+        futures = self._enqueue(SummaryWork(self._sketch_spec()))
+        self.loop.drain()
+        return {ticket: f.result() for ticket, f in futures.items()}
 
     def flush_factors(self, r=None, *, tol: Optional[float] = None,
                       r_max: Optional[int] = None, m: Optional[int] = None,
@@ -234,21 +249,16 @@ class SketchService:
         exact second pass (the service holds them anyway while queueing).
         """
         gated = self._check_gate(r, tol, with_error)
+        if not self._queue:
+            return {}
         plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
                           m=m, T=T, est_method=est_method,
                           est_backend=est_backend, use_splits=use_splits,
                           with_error=with_error, gated=gated)
-        out: Dict[int, ServedEstimate] = {}
-        for requests in self._drain_buckets().values():
-            tickets, keys, A, B = self._stack(requests)
-            res = self.engine.run(plan, keys, A, B)
-            for i, ticket in enumerate(tickets):
-                out[ticket] = ServedEstimate(
-                    jax.tree.map(lambda x: x[i], res.summary),
-                    jax.tree.map(lambda x: x[i], res.estimate.factors),
-                    error=(None if res.estimate.error is None else
-                           jax.tree.map(lambda x: x[i], res.estimate.error)))
-        return out
+        futures = self._enqueue(PipelineWork(plan))
+        self.loop.drain()
+        return {ticket: as_served(f.result())
+                for ticket, f in futures.items()}
 
     def _check_gate(self, r, tol, with_error) -> bool:
         """Validate a rank-selection request; True when quality-gated
@@ -336,6 +346,17 @@ class SketchService:
             next_row=int(state.row_high), rows_seen=int(state.rows_seen))
         return sid
 
+    def _session(self, stream_id: int) -> _StreamSession:
+        """The live session for an id, or a descriptive ``KeyError`` — an
+        unknown/already-closed id must name itself, not surface as a bare
+        dict miss."""
+        try:
+            return self._streams[stream_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown or closed stream id {stream_id!r} (open streams: "
+                f"{sorted(self._streams)})") from None
+
     def append(self, stream_id: int, A_chunk: jax.Array, B_chunk: jax.Array,
                row_offset: Optional[int] = None) -> int:
         """Absorb one row chunk into the live accumulator.
@@ -344,8 +365,10 @@ class SketchService:
         ingestion); pass it explicitly for out-of-order chunk arrival.
         Returns total rows absorbed so far (a host-side count: appending
         never blocks on the device, keeping async dispatch overlapped).
+        Raises ``KeyError`` naming the id when the stream is unknown or
+        closed.
         """
-        sess = self._streams[stream_id]
+        sess = self._session(stream_id)
         off = sess.next_row if row_offset is None else row_offset
         sess.state = sess.summarizer.update(sess.state, A_chunk, B_chunk, off)
         sess.next_row = max(sess.next_row, off + A_chunk.shape[0])
@@ -355,7 +378,7 @@ class SketchService:
     def query(self, stream_id: int) -> SketchSummary:
         """Finalized summary of the live accumulator (non-destructive: the
         session keeps absorbing chunks afterwards)."""
-        sess = self._streams[stream_id]
+        sess = self._session(stream_id)
         return sess.summarizer.finalize(sess.state)
 
     def stream_factors(self, stream_id: int, r=None, *,
@@ -373,26 +396,22 @@ class SketchService:
         chunk-by-chunk yields the same factors as the equivalent one-shot
         ``submit`` + ``flush_factors`` request. The same quality-gated mode
         is available: ``r='auto'`` with ``tol=`` gates this session's rank
-        on its one-sweep error curve (needs ``SketchService(probes=p)``)."""
+        on its one-sweep error curve (needs ``SketchService(probes=p)``).
+        Raises ``KeyError`` naming the id when the stream is unknown or
+        closed."""
+        sess = self._session(stream_id)
         gated = self._check_gate(r, tol, with_error)
         plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
                           m=m, T=T, est_method=est_method,
                           est_backend=est_backend, use_splits=use_splits,
                           with_error=with_error, gated=gated)
-        sess = self._streams[stream_id]
         summary = sess.summarizer.finalize(sess.state)
         est = self.engine.run_from_summary(plan, sess.key, summary)
         return ServedEstimate(summary, est.factors, error=est.error)
 
     def close_stream(self, stream_id: int) -> StreamState:
-        """Tear down a session; returns its final state (checkpointable)."""
+        """Tear down a session; returns its final state (checkpointable).
+        Raises ``KeyError`` naming the id when the stream is unknown or
+        already closed."""
+        self._session(stream_id)            # descriptive KeyError path
         return self._streams.pop(stream_id).state
-
-
-class ServedEstimate(NamedTuple):
-    """One serviced request: the step-1 summary, the step-2/3 factors, and
-    (for probe-carrying services with ``with_error``/quality-gated modes)
-    the a-posteriori ErrorEngine estimate the rank gate read."""
-    summary: SketchSummary
-    factors: LowRankFactors
-    error: Optional[ErrorEstimate] = None

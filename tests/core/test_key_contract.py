@@ -47,6 +47,14 @@ SERVICE_EST_KEY = [928981903, 3453687069]
 # reserved two-level probe fold ("prob", "e!")
 PROBE_KEY = [3361526193, 307077598]
 
+# fold_in(PRNGKey(0), 0x746E7421) — the reserved tenant tag fold ("tnt!"),
+# and the full two-level tenant_key derivation for a str and an int tenant:
+# fold_in(TENANT_TAG_FOLD, tenant_id) with tenant_id("acme") = crc32 masked
+# to uint31 = 96778814 and tenant_id(7) = 7
+TENANT_TAG_FOLD = [2274185980, 3446456051]
+TENANT_ACME_KEY = [1560486690, 3089195157]
+TENANT_7_KEY = [2609152254, 3911254465]
+
 
 def _eq(got_key, want):
     np.testing.assert_array_equal(np.asarray(got_key, np.uint32),
@@ -196,6 +204,45 @@ def test_pipeline_plan_key_tree(key):
     _eq(pipeline.derive_keys("sketch_svd", key)[0], SPLIT2[0])
     _eq(pipeline.derive_keys("sketch_svd", key)[1], SPLIT2[1])
     _eq(pipeline.derive_keys("direct", key)[1], KEY0)
+
+
+def test_tenant_key_tree(key):
+    """The multi-tenant namespacing fold is frozen: tenant_key is the
+    reserved two-level ``fold_in(fold_in(key, 0x746E7421), tenant_id)``,
+    tenant ids are canonical (ints pass through, strs crc32-masked), and
+    ``derive_keys(tenant=...)`` applies the fold BEFORE the layout fan-out
+    while ``tenant=None`` leaves every historical derivation untouched."""
+    from repro.core import pipeline
+    _eq(jax.random.fold_in(key, 0x746E7421), TENANT_TAG_FOLD)
+    assert pipeline.tenant_id("acme") == 96778814
+    assert pipeline.tenant_id(7) == 7
+    _eq(pipeline.tenant_key(key, "acme"), TENANT_ACME_KEY)
+    _eq(pipeline.tenant_key(key, 96778814), TENANT_ACME_KEY)   # id == str
+    _eq(pipeline.tenant_key(key, 7), TENANT_7_KEY)
+
+    # the fold namespaces BEFORE the layout fan-out: deriving under a tenant
+    # == deriving from the folded key, for every layout
+    acme = jnp.asarray(TENANT_ACME_KEY, jnp.uint32)
+    for layout in ("service", "smppca", "sketch_svd", "direct"):
+        got = pipeline.derive_keys(layout, key, tenant="acme")
+        want = pipeline.derive_keys(layout, acme)
+        _eq(got[0], np.asarray(want[0], np.uint32))
+        _eq(got[1], np.asarray(want[1], np.uint32))
+    # tenant=None is bit-identical to the pre-tenant derivation
+    _eq(pipeline.derive_keys("service", key, tenant=None)[1],
+        SERVICE_EST_KEY)
+
+    # batched mode folds each stacked key independently
+    stack = jnp.stack([key, jax.random.fold_in(key, 3)])
+    got = pipeline.derive_keys("service", stack, batched=True,
+                               tenant="acme")[0]
+    _eq(got[0], TENANT_ACME_KEY)
+
+    # invalid tenant handles are rejected, not silently hashed
+    import pytest
+    for bad in (True, 3.5, None, -1, 2 ** 31):
+        with pytest.raises((TypeError, ValueError)):
+            pipeline.tenant_id(bad)
 
 
 def test_probe_key_tree(key):

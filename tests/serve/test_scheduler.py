@@ -1,0 +1,283 @@
+"""Scheduler/dispatcher edge cases: the continuous-batching contract.
+
+Everything host-side runs under a virtual clock (``clock=lambda: now[0]``)
+so deadline forcing, wait-time shedding, and EDF ordering are deterministic;
+the dispatch tests use tiny shapes so each executable compiles once and the
+warm-path assertions read real ``PipelineEngine`` trace counters."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.pipeline import PipelineEngine
+from repro.serve.scheduler import (
+    DISPATCH_DEADLINE,
+    DISPATCH_DRAIN,
+    DISPATCH_FULL,
+    SHED_QUEUE_FULL,
+    SHED_WAIT_EXCEEDED,
+    LoopConfig,
+    PipelineWork,
+    Rejected,
+    ServingLoop,
+    SummaryWork,
+)
+
+from tests.conftest import gaussian_pair
+
+SPEC = pipeline.SketchSpec(k=8, backend="scan", block=32)
+PLAN = pipeline.PipelinePlan(
+    sketch=SPEC,
+    estimation=pipeline.EstimationSpec(m=64, T=2),
+    rank=pipeline.RankPolicy(r=2), key_layout="service")
+
+
+def _loop(now, **kw):
+    return ServingLoop(engine=PipelineEngine(),
+                       config=LoopConfig(**kw), clock=lambda: now[0])
+
+
+def test_full_batch_dispatches_on_poll(key):
+    """A bucket's open batch dispatches the moment it holds max_batch
+    requests — continuous batching, no flush call anywhere."""
+    now = [0.0]
+    loop = _loop(now, max_batch=2)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    f1 = loop.submit(key, A, B, work=SummaryWork(SPEC))
+    assert loop.poll() == 0                        # 1/2: stays open
+    f2 = loop.submit(jax.random.fold_in(key, 1), A, B, work=SummaryWork(SPEC))
+    assert loop.poll() == 1                        # 2/2: ONE fused dispatch
+    assert f1.done and f2.done
+    assert f1.result().A_sketch.shape == (8, 6)
+    assert loop.stats.occupancy == 2.0
+    assert loop.stats.dispatched[DISPATCH_FULL] == 1
+
+
+def test_deadline_forces_partial_batch(key):
+    """A lone request cannot wait forever for batch-mates: when its SLO
+    budget runs out the scheduler dispatches the partial batch."""
+    now = [0.0]
+    loop = _loop(now, max_batch=4, dispatch_margin=0.1)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    f = loop.submit(key, A, B, work=SummaryWork(SPEC), deadline=1.0)
+    assert loop.poll() == 0                        # budget remains: hold
+    now[0] = 0.85
+    assert loop.poll() == 0                        # 1.0 - 0.85 > margin
+    now[0] = 0.95
+    assert loop.poll() == 1                        # forced, 1/4 occupancy
+    assert f.done and f.shed_reason is None
+    assert loop.stats.dispatched[DISPATCH_DEADLINE] == 1
+    assert loop.stats.batched_requests == 1
+
+
+def test_shed_on_full_queue(key):
+    """Admission past max_queue raises Rejected(SHED_QUEUE_FULL) — the
+    backpressure signal — and queues nothing."""
+    now = [0.0]
+    loop = _loop(now, max_queue=2)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    loop.submit(key, A, B, work=SummaryWork(SPEC))
+    loop.submit(jax.random.fold_in(key, 1), A, B, work=SummaryWork(SPEC))
+    with pytest.raises(Rejected, match="depth limit") as exc:
+        loop.submit(jax.random.fold_in(key, 2), A, B, work=SummaryWork(SPEC))
+    assert exc.value.reason == SHED_QUEUE_FULL
+    assert loop.depth == 2
+    assert loop.stats.shed[SHED_QUEUE_FULL] == 1
+    assert loop.stats.admitted == 2
+
+
+def test_wait_time_shed(key):
+    """Requests queued past max_wait are shed at the next poll: the future
+    resolves with the shed reason and result() raises Rejected."""
+    now = [0.0]
+    loop = _loop(now, max_wait=0.5)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    f = loop.submit(key, A, B, work=SummaryWork(SPEC))
+    now[0] = 0.6
+    assert loop.poll() == 0                        # shed, not dispatched
+    assert f.done and f.shed_reason == SHED_WAIT_EXCEEDED
+    with pytest.raises(Rejected, match="max_wait"):
+        f.result()
+    assert loop.depth == 0
+    assert loop.stats.shed[SHED_WAIT_EXCEEDED] == 1
+
+
+def test_no_priority_inversion_across_buckets(key):
+    """When several batches are ready, they dispatch earliest-deadline
+    first — a late-deadline pile-up in one shape bucket cannot starve an
+    earlier deadline in another."""
+    now = [0.0]
+    loop = _loop(now, max_batch=4, dispatch_margin=0.0)
+    A1, B1 = gaussian_pair(key, d=64, n1=6, n2=5)
+    A2, B2 = gaussian_pair(jax.random.fold_in(key, 9), d=64, n1=4, n2=3)
+    late = loop.submit(key, A1, B1, work=SummaryWork(SPEC), deadline=10.0)
+    early = loop.submit(key, A2, B2, work=SummaryWork(SPEC), deadline=1.0)
+    now[0] = 10.0                                  # both deadlines due
+    assert loop.poll() == 2
+    assert early.dispatch_seq < late.dispatch_seq
+
+
+def test_edf_within_an_overfull_bucket(key):
+    """An overfull bucket serves its most urgent members in the first
+    (full) batch; the late-deadline straggler waits for its own budget."""
+    now = [0.0]
+    loop = _loop(now, max_batch=2)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    f_late = loop.submit(key, A, B, work=SummaryWork(SPEC), deadline=9.0)
+    f_mid = loop.submit(jax.random.fold_in(key, 1), A, B,
+                        work=SummaryWork(SPEC), deadline=5.0)
+    f_soon = loop.submit(jax.random.fold_in(key, 2), A, B,
+                         work=SummaryWork(SPEC), deadline=1.0)
+    assert loop.poll() == 1                        # full batch: soon + mid
+    assert f_soon.done and f_mid.done and not f_late.done
+    assert f_soon.dispatch_seq == f_mid.dispatch_seq
+    now[0] = 9.0
+    assert loop.poll() == 1                        # straggler's own deadline
+    assert f_late.done
+    assert loop.stats.dispatched == {DISPATCH_FULL: 1, DISPATCH_DEADLINE: 1}
+
+
+def test_tenant_isolation_same_key_bit_different(key):
+    """Two tenants submitting the SAME user key batch together (one fused
+    dispatch — tenancy is not in the batch signature) yet get bit-different
+    sketches; tenant=None reproduces the un-namespaced baseline exactly."""
+    now = [0.0]
+    loop = _loop(now)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    f_acme = loop.submit(key, A, B, work=SummaryWork(SPEC), tenant="acme")
+    f_glob = loop.submit(key, A, B, work=SummaryWork(SPEC), tenant="globex")
+    f_none = loop.submit(key, A, B, work=SummaryWork(SPEC))
+    assert loop.drain() == 1                       # mixed tenants, ONE batch
+    s_acme, s_glob, s_none = (f.result() for f in (f_acme, f_glob, f_none))
+    assert not np.array_equal(np.asarray(s_acme.A_sketch),
+                              np.asarray(s_glob.A_sketch))
+    assert not np.array_equal(np.asarray(s_acme.A_sketch),
+                              np.asarray(s_none.A_sketch))
+    from repro.core import summary_engine
+    baseline = summary_engine.build_summary(key, A, B, 8, backend="scan",
+                                            block=32)
+    np.testing.assert_array_equal(np.asarray(s_none.A_sketch),
+                                  np.asarray(baseline.A_sketch))
+    manual = summary_engine.build_summary(
+        pipeline.tenant_key(key, "acme"), A, B, 8, backend="scan", block=32)
+    np.testing.assert_array_equal(np.asarray(s_acme.A_sketch),
+                                  np.asarray(manual.A_sketch))
+
+
+def test_warm_cache_mixed_shape_traffic_zero_retraces(key):
+    """After one cold pass per (shape bucket, batch width), sustained
+    mixed-shape traffic is pure cache hits: zero new traces, occupancy > 1.
+    pad='pow2' maps variable batch sizes onto the already-warm widths."""
+    now = [0.0]
+    loop = _loop(now, max_batch=2, pad="pow2", dispatch_margin=0.0)
+    engine = loop.engine
+    pairs = [gaussian_pair(key, d=64, n1=6, n2=5),
+             gaussian_pair(jax.random.fold_in(key, 9), d=64, n1=4, n2=3)]
+    # cold pass: widths 1 and 2 per shape bucket
+    for i, (A, B) in enumerate(pairs):
+        loop.submit(jax.random.fold_in(key, i), A, B,
+                    work=SummaryWork(SPEC), deadline=0.0)
+        loop.poll()                                # width 1 (deadline-forced)
+        loop.submit(jax.random.fold_in(key, i + 2), A, B,
+                    work=SummaryWork(SPEC))
+        loop.submit(jax.random.fold_in(key, i + 4), A, B,
+                    work=SummaryWork(SPEC))
+        loop.poll()                                # width 2 (full)
+    traces_cold = engine.stats.traces
+    dispatches_cold = loop.stats.dispatches
+    # steady state: interleaved mixed-shape traffic, full and partial batches
+    for rep in range(3):
+        fs = []
+        for i, (A, B) in enumerate(pairs):
+            fs.append(loop.submit(
+                jax.random.fold_in(key, 10 + rep * 4 + i), A, B,
+                work=SummaryWork(SPEC)))
+            fs.append(loop.submit(
+                jax.random.fold_in(key, 20 + rep * 4 + i), A, B,
+                work=SummaryWork(SPEC)))
+        loop.poll()
+        # and a deadline-forced partial (width 1 -> already-warm executable)
+        f = loop.submit(jax.random.fold_in(key, 30 + rep), pairs[0][0],
+                        pairs[0][1], work=SummaryWork(SPEC), deadline=0.0)
+        loop.poll()
+        assert all(x.done for x in fs) and f.done
+    assert engine.stats.traces == traces_cold      # zero new traces, warm
+    assert loop.stats.dispatches > dispatches_cold
+    assert loop.stats.occupancy > 1.0
+
+
+def test_pow2_padding_is_bit_exact_and_bounds_traces(key):
+    """A padded partial batch returns bit-identical per-request results to
+    an unpadded loop, and shares the padded width's executable (no new
+    trace when a genuinely full batch of that width arrives later)."""
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    keys = [jax.random.fold_in(key, i) for i in range(7)]
+
+    def run(pad):
+        now = [0.0]
+        loop = _loop(now, max_batch=4, pad=pad)
+        fs = [loop.submit(k, A, B, work=SummaryWork(SPEC)) for k in keys[:3]]
+        loop.drain()                               # batch of 3
+        return loop, [f.result() for f in fs]
+
+    loop_p, padded = run("pow2")
+    loop_n, plain = run("none")
+    for sp, sn in zip(padded, plain):
+        np.testing.assert_array_equal(np.asarray(sp.A_sketch),
+                                      np.asarray(sn.A_sketch))
+    # the 3-request batch compiled the width-4 executable: a real full batch
+    # of 4 is now a cache hit
+    traces = loop_p.engine.stats.traces
+    fs = [loop_p.submit(k, A, B, work=SummaryWork(SPEC)) for k in keys[:4]]
+    assert loop_p.poll() == 1
+    assert loop_p.engine.stats.traces == traces
+    assert all(f.done for f in fs)
+
+
+def test_drain_dispatches_whole_buckets(key):
+    """drain() (the flush path) ignores max_batch: one fused dispatch per
+    shape bucket, preserving the historical SketchService parity."""
+    now = [0.0]
+    loop = _loop(now, max_batch=2)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    fs = [loop.submit(jax.random.fold_in(key, i), A, B,
+                      work=SummaryWork(SPEC), deadline=100.0 + i)
+          for i in range(5)]
+    # 2 full batches pop on poll; drain takes the remaining 3 as ONE batch
+    assert loop.poll() == 2
+    assert loop.drain() == 1
+    assert all(f.done for f in fs)
+    assert loop.stats.dispatched[DISPATCH_DRAIN] == 1
+    assert loop.stats.batched_requests == 5
+
+
+def test_background_pump_resolves_futures(key):
+    """start()/stop(): callers just submit and block on futures; batching,
+    deadline forcing, and dispatch all happen on the loop thread."""
+    loop = ServingLoop(engine=PipelineEngine(),
+                       config=LoopConfig(max_batch=2,
+                                         default_deadline=0.05))
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    loop.start(interval=1e-3)
+    try:
+        fs = [loop.submit(jax.random.fold_in(key, i), A, B,
+                          work=PipelineWork(PLAN)) for i in range(3)]
+        outs = [f.result(timeout=120.0) for f in fs]
+    finally:
+        loop.stop()
+    assert all(o.estimate.factors.U.shape == (6, 2) for o in outs)
+    assert loop.stats.completed == 3
+    # 2 went as a full batch; the straggler was deadline-forced
+    assert loop.stats.dispatches == 2
+
+
+def test_loop_config_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        ServingLoop(engine=PipelineEngine(),
+                    config=LoopConfig(max_batch=0))
+    with pytest.raises(ValueError, match="max_queue"):
+        ServingLoop(engine=PipelineEngine(),
+                    config=LoopConfig(max_queue=0))
+    with pytest.raises(ValueError, match="pad"):
+        ServingLoop(engine=PipelineEngine(),
+                    config=LoopConfig(pad="pow3"))

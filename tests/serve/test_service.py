@@ -71,6 +71,42 @@ def test_flush_and_flush_factors_share_summary_randomness(key):
             np.asarray(getattr(served.summary, name)))
 
 
+def test_unknown_stream_id_raises_keyerror_with_id(key):
+    """Every stream entry point names the offending id in a KeyError —
+    never a bare dict miss — for unknown AND already-closed streams."""
+    svc = SketchService(k=8, backend="scan", block=32)
+    A, B = gaussian_pair(key, d=64, n1=6, n2=5)
+    for call in (lambda: svc.append("nope", A, B),
+                 lambda: svc.stream_factors("nope", r=2, m=100, T=2),
+                 lambda: svc.close_stream("nope")):
+        with pytest.raises(KeyError, match="'nope'"):
+            call()
+    sid = svc.open_stream(key, 64, 6, 5)
+    svc.append(sid, A, B)
+    svc.close_stream(sid)
+    with pytest.raises(KeyError, match=str(sid)):
+        svc.append(sid, A, B)
+    with pytest.raises(KeyError, match=str(sid)):
+        svc.stream_factors(sid, r=2, m=100, T=2)
+    with pytest.raises(KeyError, match=str(sid)):
+        svc.close_stream(sid)
+
+
+def test_empty_flush_returns_empty_without_dispatch(key):
+    """flush()/flush_factors() with nothing queued return {} and never
+    touch the engine — no dispatch, no trace, no cache lookup."""
+    eng = PipelineEngine()
+    svc = SketchService(k=8, backend="scan", block=32, engine=eng)
+    assert svc.flush() == {}
+    assert svc.flush_factors(r=2, m=100, T=2) == {}
+    assert eng.stats.traces == 0
+    assert eng.stats.hits == 0 and eng.stats.misses == 0
+    assert svc.loop.stats.dispatches == 0
+    # flush_factors still validates its own arguments on the empty path
+    with pytest.raises(ValueError):
+        svc.flush_factors(r="auto")               # auto rank needs tol
+
+
 def test_default_engine_is_shared_across_services(key):
     """Unpinned services share the process-default engine, so one service's
     warm plans serve another's identical traffic."""

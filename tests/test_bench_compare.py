@@ -1,0 +1,110 @@
+"""tools/bench_compare.py: the annotate-only perf-trajectory gate.
+
+Regressions past the threshold become ``::warning::`` lines (never a
+failure), improvements and small noise stay silent, and comparisons are
+refused — not faked — when the ``meta`` provenance blocks are missing or
+describe different backends/smoke settings."""
+import importlib.util
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location(
+        "bench_compare", REPO / "tools" / "bench_compare.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+META = {"git_sha": "a" * 40, "jax_version": "0.4.30", "backend": "cpu",
+        "smoke": True}
+
+
+def _report(**cells):
+    return {"suite": "serving", "meta": dict(META),
+            "results": [dict(name=name, **metrics)
+                        for name, metrics in cells.items()]}
+
+
+def test_regression_is_annotated_in_both_directions():
+    mod = _load()
+    base = _report(warm=dict(warm_us_per_request=100.0, measured_rps=50.0))
+    cur = _report(warm=dict(warm_us_per_request=130.0, measured_rps=30.0))
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 2
+    assert any("warm_us_per_request rose 30%" in w for w in warnings)
+    assert any("measured_rps fell" in w for w in warnings)
+
+
+def test_improvements_and_noise_stay_silent():
+    mod = _load()
+    base = _report(warm=dict(warm_us_per_request=100.0, measured_rps=50.0,
+                             spectral_error=0.5))
+    cur = _report(warm=dict(warm_us_per_request=85.0,    # improved
+                            measured_rps=52.0,           # improved
+                            spectral_error=9.9))         # untracked metric
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert warnings == []
+
+
+def test_cells_on_one_side_are_informational():
+    mod = _load()
+    base = _report(old_cell=dict(us_per_call=10.0))
+    cur = _report(new_cell=dict(us_per_call=10.0))
+    warnings, infos = mod.compare(base, cur, 0.2)
+    assert warnings == []
+    assert {"cell new_cell only in current",
+            "cell old_cell only in baseline"} == set(infos)
+
+
+def test_nested_traffic_report_is_compared():
+    mod = _load()
+    base = _report(warm=dict(us_per_call=10.0))
+    base["traffic"] = _report(steady=dict(p99_ms=100.0))
+    cur = _report(warm=dict(us_per_call=10.0))
+    cur["traffic"] = _report(steady=dict(p99_ms=200.0))
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 1 and "traffic/steady.p99_ms" in warnings[0]
+
+
+def test_refuses_cross_backend_and_missing_meta():
+    mod = _load()
+    base, cur = _report(), _report()
+    assert mod.check_meta(base, cur) is None
+    cur["meta"]["backend"] = "gpu"
+    assert "backend mismatch" in mod.check_meta(base, cur)
+    cur["meta"]["backend"] = "cpu"
+    cur["meta"]["smoke"] = False
+    assert "smoke mismatch" in mod.check_meta(base, cur)
+    del base["meta"]
+    assert "missing meta" in mod.check_meta(_report(), {"results": []})
+
+
+def test_cli_always_exits_zero(tmp_path, capsys):
+    mod = _load()
+    base = _report(warm=dict(us_per_call=10.0))
+    cur = _report(warm=dict(us_per_call=20.0))
+    bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+    bp.write_text(json.dumps(base))
+    cp.write_text(json.dumps(cur))
+    assert mod.main([str(bp), str(cp)]) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "us_per_call rose 100%" in out
+    # refusal path: cross-backend baseline
+    base["meta"]["backend"] = "tpu"
+    bp.write_text(json.dumps(base))
+    assert mod.main([str(bp), str(cp)]) == 0
+    assert "SKIP: refusing comparison" in capsys.readouterr().out
+    # unreadable artifact path
+    assert mod.main([str(tmp_path / "missing.json"), str(cp)]) == 0
+    assert "SKIP: unreadable artifact" in capsys.readouterr().out
+
+
+def test_ci_runs_traffic_smoke_and_bench_compare():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "--suite traffic --smoke" in ci
+    assert "tools/bench_compare.py" in ci
+    assert "--cov=repro.serve.scheduler" in ci

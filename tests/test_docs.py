@@ -19,7 +19,8 @@ def _load_check_docs():
 def test_docs_exist_and_linked_from_readme():
     readme = (REPO / "README.md").read_text()
     for doc in ("docs/architecture.md", "docs/paper_map.md",
-                "docs/streaming.md", "docs/pipeline.md"):
+                "docs/streaming.md", "docs/pipeline.md",
+                "docs/serving.md"):
         assert (REPO / doc).exists(), doc
         assert doc in readme, f"README does not link {doc}"
 
@@ -38,4 +39,10 @@ def test_ci_has_docs_and_streaming_jobs():
     ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
     assert "tools/check_docs.py" in ci
     assert "--suite streaming" in ci
+    assert "--suite traffic" in ci
     assert os.path.exists(REPO / "benchmarks" / "run.py")
+
+
+def test_scheduler_doctests_are_wired_into_docs_gate():
+    mod = _load_check_docs()
+    assert "repro.serve.scheduler" in mod.DOCTEST_MODULES

@@ -1,0 +1,134 @@
+"""Compare two BENCH_*.json artifacts and annotate perf regressions.
+
+    python tools/bench_compare.py BASELINE.json CURRENT.json [--threshold 0.2]
+
+The CI trajectory gate: the bench-smoke job downloads the previous
+main-branch artifact and runs this against the fresh one. Regressions are
+**annotated, never failed** — the tool always exits 0 on a completed or
+refused comparison (only usage errors exit non-zero), emitting GitHub
+``::warning::`` lines for every tracked metric that moved more than
+``--threshold`` (default 20%) in the bad direction.
+
+Comparisons are only meaningful like-for-like, so both artifacts must carry
+the ``meta`` block ``benchmarks/run.py`` stamps (git sha, jax version,
+backend, smoke flag): a missing ``meta``, a backend mismatch (cpu vs gpu),
+or a smoke-vs-full mismatch makes the tool REFUSE the comparison (printed
+as ``SKIP``, still exit 0 — an absent or foreign baseline must not block
+CI).
+
+Tracked metrics are per-record by name within each suite's ``results`` list
+(plus the nested ``traffic`` report inside ``BENCH_serving.json``):
+lower-is-better wall times / latencies / shed rate, higher-is-better
+throughput / occupancy. Records or metrics present on only one side are
+reported as informational, not warnings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: metric name -> True if lower is better
+TRACKED = {
+    "us_per_call": True,
+    "cold_us_per_request": True,
+    "warm_us_per_request": True,
+    "p50_ms": True,
+    "p99_ms": True,
+    "mean_ms": True,
+    "shed_rate": True,
+    "rows_per_s": False,
+    "measured_rps": False,
+    "occupancy": False,
+}
+
+
+def _records(report: dict, prefix: str = "") -> Dict[str, dict]:
+    """Flatten a report into {record path: record dict} over ``results``
+    lists, following the nested ``traffic`` report if present."""
+    out: Dict[str, dict] = {}
+    for rec in report.get("results", ()):
+        name = rec.get("name")
+        if isinstance(name, str):
+            out[f"{prefix}{name}"] = rec
+    if isinstance(report.get("traffic"), dict):
+        out.update(_records(report["traffic"], prefix=f"{prefix}traffic/"))
+    return out
+
+
+def check_meta(base: dict, cur: dict) -> Optional[str]:
+    """The refusal reason if the two artifacts are not comparable."""
+    mb, mc = base.get("meta"), cur.get("meta")
+    if not isinstance(mb, dict) or not isinstance(mc, dict):
+        return "missing meta block (re-run benchmarks/run.py to stamp one)"
+    for field in ("backend", "smoke"):
+        if mb.get(field) != mc.get(field):
+            return (f"{field} mismatch: baseline={mb.get(field)!r} "
+                    f"current={mc.get(field)!r}")
+    return None
+
+
+def compare(base: dict, cur: dict, threshold: float
+            ) -> Tuple[List[str], List[str]]:
+    """(regression warnings, informational lines) for two reports."""
+    warnings: List[str] = []
+    infos: List[str] = []
+    brecs, crecs = _records(base), _records(cur)
+    for path in sorted(set(brecs) | set(crecs)):
+        if path not in brecs or path not in crecs:
+            side = "baseline" if path in brecs else "current"
+            infos.append(f"cell {path} only in {side}")
+            continue
+        for metric, lower_better in TRACKED.items():
+            b, c = brecs[path].get(metric), crecs[path].get(metric)
+            if not isinstance(b, (int, float)) or \
+                    not isinstance(c, (int, float)):
+                continue
+            if b <= 0 or c <= 0:
+                continue             # rates can legitimately be 0; no ratio
+            worse = (c / b - 1.0) if lower_better else (b / c - 1.0)
+            if worse > threshold:
+                arrow = "rose" if lower_better else "fell"
+                warnings.append(
+                    f"{path}.{metric} {arrow} {worse * 100:.0f}% "
+                    f"({b:.4g} -> {c:.4g})")
+    return warnings, infos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="previous main-branch BENCH_*.json")
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression that triggers a warning")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        with open(args.current) as f:
+            cur = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"SKIP: unreadable artifact ({e})", flush=True)
+        return 0
+
+    reason = check_meta(base, cur)
+    if reason is not None:
+        print(f"SKIP: refusing comparison — {reason}", flush=True)
+        return 0
+
+    warnings, infos = compare(base, cur, args.threshold)
+    for line in infos:
+        print(f"note: {line}", flush=True)
+    for line in warnings:
+        print(f"::warning title=bench regression::{line}", flush=True)
+    print(f"bench_compare: {len(warnings)} regression(s) over "
+          f"{args.threshold * 100:.0f}% threshold "
+          f"({base.get('meta', {}).get('git_sha', '?')[:12]} -> "
+          f"{cur.get('meta', {}).get('git_sha', '?')[:12]})", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

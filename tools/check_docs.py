@@ -29,6 +29,7 @@ DOCTEST_MODULES = (
     "repro.core.pipeline",
     "repro.core.streaming",
     "repro.serve.engine",
+    "repro.serve.scheduler",
 )
 
 _LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
