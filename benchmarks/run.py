@@ -21,10 +21,14 @@ for fixed-rank, with-error, and quality-gated plans) — and writes
 ``traffic_sweep`` — Poisson arrivals x shape-mix x tenant-mix through the
 continuously-batched ``ServingLoop`` (requests/sec, p50/p99 latency, batch
 occupancy, shed rate) — and merges its report into the same
-``BENCH_serving.json`` under the ``"traffic"`` key. Every suite stamps a
-``meta`` block (git sha, jax version, backend, smoke flag) into its JSON so
-``tools/bench_compare.py`` can refuse cross-backend comparisons;
-``--smoke`` shrinks sizes for CI.
+``BENCH_serving.json`` under the ``"traffic"`` key. ``--suite kernels``
+runs the ``kernel_sweep`` — every tunable Pallas kernel x shape x
+KernelConfig cell (the roofline ranking head plus the frozen default),
+recording us/call, achieved GB/s against the model's HBM-byte count, and
+the static cost terms — and writes ``BENCH_kernels.json``
+(``--out-kernels``). Every suite stamps a ``meta`` block (git sha, jax
+version, backend, smoke flag) into its JSON so ``tools/bench_compare.py``
+can refuse cross-backend comparisons; ``--smoke`` shrinks sizes for CI.
 
 Real datasets (SIFT10K/NIPS-BW/URL) are not redistributable offline;
 spectrum-matched synthetic stand-ins validate the paper's *relative* claims
@@ -670,6 +674,73 @@ def traffic_sweep(*, smoke: bool = False) -> dict:
     }
 
 
+def kernel_sweep(key, *, smoke: bool = False) -> dict:
+    """Kernel-perf sweep: every tunable Pallas kernel x shape x config cell.
+
+    For each kernel and canonical shape the autotuner's roofline ranking
+    head (top-N candidates under the VMEM budget) plus the frozen default
+    config are wall-timed through ``repro.kernels.ops`` — the same entry
+    points production traffic uses — and each cell records ``us_per_call``,
+    ``achieved_gbps`` (the cost model's HBM-byte count over measured time),
+    and the static roofline terms. On interpret-mode CPU the absolute
+    times are interpreter-relative; the ranking and the modeled terms are
+    the stable signal ``tools/bench_compare.py`` tracks.
+    """
+    del key                      # measure_config seeds its own inputs
+    from repro.kernels import tuning
+
+    if smoke:
+        shapes = {
+            "sketch_fused": [(64, 512, 256)],
+            "blocked_fwht": [(512, 256)],
+            "sampled_dot": [(256, 256, 64, 512)],
+            "flash_attention": [(4, 256, 64)],
+        }
+        top_n, reps = 2, 1
+    else:
+        shapes = {
+            "sketch_fused": [(128, 4096, 512), (256, 8192, 512)],
+            "blocked_fwht": [(2048, 512)],
+            "sampled_dot": [(1024, 1024, 128, 4096)],
+            "flash_attention": [(8, 1024, 128)],
+        }
+        top_n, reps = 3, 2
+    results = []
+    for kernel, shape_list in shapes.items():
+        default = tuning.DEFAULTS[kernel]
+        for shape in shape_list:
+            ranked = tuning.rank_candidates(kernel, shape)
+            cfgs = list(ranked[:top_n])
+            if default not in cfgs:
+                cfgs.append(default)
+            shape_tag = "x".join(str(s) for s in shape)
+            for cfg in cfgs:
+                cost = tuning.roofline_cost(cfg, shape)
+                us = tuning.measure_config(cfg, shape, reps=reps)
+                results.append({
+                    "name": f"{kernel}/{shape_tag}/{cfg.tag()}",
+                    "kernel": kernel,
+                    "shape": list(shape),
+                    "config": cfg.tag(),
+                    "static_rank": (ranked.index(cfg)
+                                    if cfg in ranked else None),
+                    "is_default": cfg == default,
+                    "us_per_call": us,
+                    "achieved_gbps": tuning.achieved_gbps(cfg, shape, us),
+                    "modeled": cost.as_dict(),
+                })
+    return {
+        "suite": "kernels",
+        "meta": _meta(smoke),
+        "config": {"shapes": {k: [list(s) for s in v]
+                              for k, v in shapes.items()},
+                   "top_n": top_n, "reps": reps, "smoke": smoke,
+                   "vmem_budget_bytes": tuning.VMEM_BUDGET_BYTES,
+                   "backend_platform": jax.default_backend()},
+        "results": results,
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -791,11 +862,24 @@ def run_streaming_suite(key, out_path: str, smoke: bool) -> None:
     print(f"max_parity_error,{report['max_parity_error']:.2e}", flush=True)
 
 
+def run_kernels_suite(key, out_path: str, smoke: bool) -> None:
+    report = kernel_sweep(jax.random.fold_in(
+        key, zlib.crc32(b"kernels") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,us_per_call,achieved_gbps,static_rank,is_default")
+    for rec in report["results"]:
+        print(f"{rec['name']},{rec['us_per_call']:.0f},"
+              f"{rec['achieved_gbps']:.3f},{rec['static_rank']},"
+              f"{rec['is_default']}", flush=True)
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite",
                    choices=("paper", "estimation", "streaming", "error",
-                            "serving", "traffic", "all"),
+                            "serving", "traffic", "kernels", "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
@@ -807,6 +891,8 @@ def main() -> None:
                    help="JSON artifact path for the error suite")
     p.add_argument("--out-serving", default="BENCH_serving.json",
                    help="JSON artifact path for the serving suite")
+    p.add_argument("--out-kernels", default="BENCH_kernels.json",
+                   help="JSON artifact path for the kernel-perf suite")
     args = p.parse_args()
     key = jax.random.PRNGKey(0)
     if args.suite in ("paper", "all"):
@@ -821,6 +907,8 @@ def main() -> None:
         run_serving_suite(key, args.out_serving, args.smoke)
     if args.suite in ("traffic", "all"):
         run_traffic_suite(args.out_serving, args.smoke)
+    if args.suite in ("kernels", "all"):
+        run_kernels_suite(key, args.out_kernels, args.smoke)
 
 
 if __name__ == "__main__":

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import error_engine, estimation_engine, summary_engine
 from repro.core.types import EstimateResult, SketchSummary
+from repro.kernels.tuning import TuningSpec
 
 #: Supported key layouts — how one caller key fans out into per-stage keys.
 LAYOUTS = ("service", "smppca", "sketch_svd", "direct")
@@ -143,6 +144,14 @@ class PipelinePlan(NamedTuple):
     ``with_error`` attaches the ErrorEngine estimate inside the same fused
     dispatch (needs ``sketch.probes > 0``); the quality-gated path always
     attaches it, mirroring the escalation loop it replaces.
+
+    ``tuning`` optionally pins Pallas kernel configs (a hashable
+    ``repro.kernels.tuning.TuningSpec``). ``None`` — the default, and the
+    hash every pre-tuning plan has — resolves each kernel through the
+    committed tuning table / frozen defaults at trace time. Because the
+    spec is part of this NamedTuple it is part of every executable cache
+    key: two plans differing only in tuning compile separately, and warm
+    repeat-shape traffic under either never re-traces.
     """
 
     sketch: SketchSpec = SketchSpec()
@@ -150,6 +159,7 @@ class PipelinePlan(NamedTuple):
     rank: RankPolicy = RankPolicy()
     key_layout: str = "service"
     with_error: bool = False
+    tuning: Optional[TuningSpec] = None
 
 
 class PipelineResult(NamedTuple):
@@ -284,6 +294,11 @@ def validate_plan(plan: PipelinePlan) -> None:
                          f"got {rank.r!r}")
     if plan.with_error and plan.sketch.probes <= 0:
         raise ValueError("with_error=True needs SketchSpec(probes=p)")
+    if plan.tuning is not None:
+        if not isinstance(plan.tuning, TuningSpec):
+            raise ValueError(f"PipelinePlan.tuning must be a TuningSpec or "
+                             f"None, got {type(plan.tuning).__name__}")
+        plan.tuning.validate()
 
 
 def _signature(tree) -> tuple:
@@ -342,7 +357,7 @@ class PipelineEngine:
             k_sketch, k_est = derive_keys(plan.key_layout, key,
                                           batched=batched)
             summary = summary_engine.summary_stage(plan.sketch, k_sketch,
-                                                   A, B)
+                                                   A, B, plan.tuning)
             exact = (A, B) if plan.estimation.method == "lela_waltmin" \
                 else None
             est = estimation_engine.estimation_stage(
@@ -356,7 +371,7 @@ class PipelineEngine:
             self.stats.traces += 1
             k_sketch, _ = derive_keys(plan.key_layout, key, batched=batched)
             summary = summary_engine.summary_stage(plan.sketch, k_sketch,
-                                                   A, B)
+                                                   A, B, plan.tuning)
             return summary, self._curve(plan, summary, batched)
         return jax.jit(curve_fn)
 
@@ -377,10 +392,11 @@ class PipelineEngine:
                 exact_pair=exact_pair, with_error=plan.with_error)
         return jax.jit(estimate_fn)
 
-    def _build_summary_only(self, spec: SketchSpec) -> Callable:
+    def _build_summary_only(self, spec: SketchSpec,
+                            tuning: Optional[TuningSpec]) -> Callable:
         def summary_fn(key, A, B):
             self.stats.traces += 1
-            return summary_engine.summary_stage(spec, key, A, B)
+            return summary_engine.summary_stage(spec, key, A, B, tuning)
         return jax.jit(summary_fn)
 
     def _curve(self, plan: PipelinePlan, summary, batched: bool):
@@ -494,11 +510,20 @@ class PipelineEngine:
                                     exact_pair)
 
     def summarize(self, spec: SketchSpec, key: jax.Array, A: jax.Array,
-                  B: jax.Array) -> SketchSummary:
+                  B: jax.Array, tuning: Optional[TuningSpec] = None
+                  ) -> SketchSummary:
         """The step-1 stage alone as a cached executable (``SketchService.
-        flush``) — ``key`` is the sketch key (no layout fan-out)."""
-        fn = self._executable(("summary", spec, _signature((key, A, B))),
-                              lambda: self._build_summary_only(spec))
+        flush``) — ``key`` is the sketch key (no layout fan-out). ``tuning``
+        joins the cache key exactly as ``PipelinePlan.tuning`` does for full
+        plans, so a pinned-config summary path also never re-traces warm."""
+        if tuning is not None:
+            if not isinstance(tuning, TuningSpec):
+                raise ValueError(f"tuning must be a TuningSpec or None, "
+                                 f"got {type(tuning).__name__}")
+            tuning.validate()
+        fn = self._executable(
+            ("summary", spec, tuning, _signature((key, A, B))),
+            lambda: self._build_summary_only(spec, tuning))
         return fn(key, A, B)
 
     def _estimate_from_summary(self, plan, key, summary,

@@ -60,7 +60,11 @@ _BACKENDS: Dict[str, Callable] = {}
 
 
 def register_backend(name: str):
-    """Register ``fn(key, A, B, k, *, method, block, precision, **kw)``."""
+    """Register ``fn(key, A, B, k, *, method, block, precision, tuning,
+    **kw)``. ``tuning`` is an optional hashable
+    ``repro.kernels.tuning.TuningSpec``; only kernel-backed backends act on
+    it (the others must accept and ignore it so one plan drives any
+    backend)."""
     def _deco(fn):
         _BACKENDS[name] = fn
         return fn
@@ -168,12 +172,12 @@ def _sketch_dot(P: jax.Array, X: jax.Array,
 
 @register_backend("reference")
 @functools.partial(jax.jit, static_argnames=("k", "method", "block",
-                                             "precision"))
+                                             "precision", "tuning"))
 def _reference_backend(key, A, B, k: int, *, method: str = "gaussian",
-                       block: int = 1024,
-                       precision: Optional[str] = None) -> SketchSummary:
+                       block: int = 1024, precision: Optional[str] = None,
+                       tuning=None) -> SketchSummary:
     """Materialized projection operator + one dense contraction per matrix."""
-    del block
+    del block, tuning
     d = A.shape[0]
     P = projection_rows(key, jnp.arange(d), k, method=method, d_total=d)
     Ac, Bc = _cast(A, precision), _cast(B, precision)
@@ -184,10 +188,10 @@ def _reference_backend(key, A, B, k: int, *, method: str = "gaussian",
 
 @register_backend("rows")
 def _rows_backend(key, A, B, k: int, *, method: str = "gaussian",
-                  block: int = 1024,
-                  precision: Optional[str] = None) -> SketchSummary:
+                  block: int = 1024, precision: Optional[str] = None,
+                  tuning=None) -> SketchSummary:
     """Row-stream semantics over the full in-memory pair (rows 0..d-1)."""
-    del block
+    del block, tuning
     d = A.shape[0]
     return rows_summary(key, jnp.arange(d), A, B, k, method=method,
                         d_total=d, precision=precision)
@@ -215,14 +219,15 @@ def rows_summary(key: jax.Array, row_idx: jax.Array, A_rows: jax.Array,
 
 @register_backend("scan")
 @functools.partial(jax.jit, static_argnames=("k", "method", "block",
-                                             "precision"))
+                                             "precision", "tuning"))
 def _scan_backend(key, A, B, k: int, *, method: str = "gaussian",
-                  block: int = 1024,
-                  precision: Optional[str] = None) -> SketchSummary:
+                  block: int = 1024, precision: Optional[str] = None,
+                  tuning=None) -> SketchSummary:
     """Single ``lax.scan`` pass over row blocks; each block regenerates its
     projection slice from (key, global row ids) so the (k, d) operator never
     exists — the memory model of the paper's streaming pass and of the fused
     TPU kernel."""
+    del tuning
     d, n1 = A.shape
     n2 = B.shape[1]
     pad = (-d) % block
@@ -263,18 +268,22 @@ def _scan_backend(key, A, B, k: int, *, method: str = "gaussian",
 
 @register_backend("pallas")
 def _pallas_backend(key, A, B, k: int, *, method: str = "gaussian",
-                    block: int = 1024,
-                    precision: Optional[str] = None) -> SketchSummary:
+                    block: int = 1024, precision: Optional[str] = None,
+                    tuning=None) -> SketchSummary:
     """Kernel-backed pass: the fused sketch+norms kernel for gaussian, the
     blocked-FWHT MXU kernel (sign flip fused into its first stage) for srht.
-    ``interpret`` is auto-detected from the platform inside kernels/ops."""
+    ``interpret`` is auto-detected from the platform inside kernels/ops.
+    ``tuning`` (a ``TuningSpec``) pins kernel block configs; absent ones
+    resolve via the committed tuning table / frozen defaults inside ops."""
     from repro.kernels import ops as kops
     del block
+    cfg_sketch = tuning.config_for("sketch_fused") if tuning else None
+    cfg_fwht = tuning.config_for("blocked_fwht") if tuning else None
     d = A.shape[0]
     if method == "gaussian":
         P = projection_rows(key, jnp.arange(d), k).T             # (k, d)
-        As, na = kops.sketch_fused(P, A, precision=precision)
-        Bs, nb = kops.sketch_fused(P, B, precision=precision)
+        As, na = kops.sketch_fused(P, A, precision=precision, config=cfg_sketch)
+        Bs, nb = kops.sketch_fused(P, B, precision=precision, config=cfg_sketch)
         return SketchSummary(As, Bs, na, nb)
     if method == "srht":
         signs, rows, dp = srht_plan(key, d, k)
@@ -284,7 +293,7 @@ def _pallas_backend(key, A, B, k: int, *, method: str = "gaussian",
             # the FWHT kernel casts tiles to f32 in its body; feed the
             # (possibly reduced-precision) input straight in
             Xp = jnp.pad(_cast(X, precision), ((0, dp - d), (0, 0)))
-            HX = kops.blocked_fwht(Xp, signs_p) / jnp.sqrt(dp)
+            HX = kops.blocked_fwht(Xp, signs_p, config=cfg_fwht) / jnp.sqrt(dp)
             return HX[rows] * jnp.sqrt(dp / k)
 
         Ac, Bc = _cast(A, precision), _cast(B, precision)
@@ -296,10 +305,10 @@ def _pallas_backend(key, A, B, k: int, *, method: str = "gaussian",
 @register_backend("distributed")
 def _distributed_backend(key, A, B, k: int, *, method: str = "gaussian",
                          block: int = 1024, precision: Optional[str] = None,
-                         mesh=None, axis: Optional[str] = None
+                         tuning=None, mesh=None, axis: Optional[str] = None
                          ) -> SketchSummary:
     """Row-sharded shard_map pass; requires ``mesh`` and ``axis`` kwargs."""
-    del block
+    del block, tuning
     if mesh is None or axis is None:
         raise ValueError("backend='distributed' needs mesh=... and axis=...")
     from repro.core.distributed import distributed_sketch_summary
@@ -325,7 +334,7 @@ def _is_key_stack(key, L: int) -> bool:
 def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
                   method: str = "gaussian", backend: str = "reference",
                   block: int = 1024, precision: Optional[str] = None,
-                  probes: int = 0, mesh=None,
+                  probes: int = 0, tuning=None, mesh=None,
                   axis: Optional[str] = None) -> SketchSummary:
     """One-pass summary of (A, B): sketches (k, n) + exact column norms.
 
@@ -343,6 +352,9 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
              probe stage is backend-independent, so the probe block is
              bit-identical across backends for a fixed ``block``). Powers
              the ErrorEngine's ``estimate_error``/``adaptive_rank``.
+    tuning:  optional ``repro.kernels.tuning.TuningSpec`` pinning kernel
+             block configs (acted on by the pallas backend; layout-only, so
+             results stay within float reassociation of the default).
     mesh/axis: required for backend='distributed' (rows sharded over axis).
 
     >>> import jax, jax.numpy as jnp
@@ -362,7 +374,7 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
         raise ValueError(
             f"unknown summary backend {backend!r} (use one of {backends()})")
     fn = _BACKENDS[backend]
-    kw = dict(method=method, block=block, precision=precision)
+    kw = dict(method=method, block=block, precision=precision, tuning=tuning)
     if backend == "distributed":
         kw.update(mesh=mesh, axis=axis)
 
@@ -400,8 +412,8 @@ def norms_only_summary(A: jax.Array, B: jax.Array) -> SketchSummary:
                          norm_A, norm_B)
 
 
-def summary_stage(spec, key: jax.Array, A: jax.Array,
-                  B: jax.Array) -> SketchSummary:
+def summary_stage(spec, key: jax.Array, A: jax.Array, B: jax.Array,
+                  tuning=None) -> SketchSummary:
     """The step-1 pass as a fusable stage driven by a declarative spec.
 
     ``spec`` is any object with the ``SketchSpec`` fields (method, backend,
@@ -409,13 +421,16 @@ def summary_stage(spec, key: jax.Array, A: jax.Array,
     taking it duck-typed keeps this module import-free of the pipeline layer.
     Pure and traceable: the PipelineEngine composes it with the estimation
     and error stages inside ONE jitted executable. ``method='norms_only'``
-    is the sketch-free LELA first pass (the key is unused).
+    is the sketch-free LELA first pass (the key is unused). ``tuning``
+    rides the plan (``PipelinePlan.tuning``), not the spec, so one spec
+    hash serves every tuning.
     """
     if spec.method == "norms_only":
         return norms_only_summary(A, B)
     return build_summary(key, A, B, spec.k, method=spec.method,
                          backend=spec.backend, block=spec.block,
-                         precision=spec.precision, probes=spec.probes)
+                         precision=spec.precision, probes=spec.probes,
+                         tuning=tuning)
 
 
 # ---------------------------------------------------------------------------

@@ -81,7 +81,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """q/k/v: (BH, S, Dh) with heads pre-expanded (GQA handled by the ops
     wrapper). Returns (BH, S, Dh) in q's dtype."""
     BH, S, Dh = q.shape
-    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    if S % bq or S % bk:
+        raise ValueError(f"flash_attention: S={S} not divisible by blocks "
+                         f"(bq={bq}, bk={bk})")
     scale = 1.0 / math.sqrt(Dh)
     grid = (BH, S // bq, S // bk)
     kernel = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,

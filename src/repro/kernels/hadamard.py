@@ -52,29 +52,55 @@ def _stage2_kernel(h_ref, y_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("b", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("b", "bn", "grid_order", "interpret"))
 def blocked_fwht(X: jax.Array, signs: jax.Array, *, b: int = 128,
-                 bn: int = 256, interpret: bool = True) -> jax.Array:
+                 bn: int = 256, grid_order: str | None = None,
+                 interpret: bool = True) -> jax.Array:
     """H_d @ (signs[:, None] * X), unnormalized. X: (d, n), d = a*b, both
-    powers of two, n % bn == 0 (ops.py pads)."""
+    powers of two, n % bn == 0 (ops.py pads).
+
+    ``grid_order`` picks stage 1's traversal: ``None``/``'n_inner'`` walks
+    n-tiles innermost (one Hb/sign stripe resident per p), ``'p_inner'``
+    walks p innermost (one X column stripe's tiles consecutive — better when
+    bn is wide and b small). Legal because stage 1 writes each output block
+    exactly once (no revisit/accumulation), so traversal order cannot change
+    the result — bit-identical by construction, which tests/kernels assert.
+    """
     d, n = X.shape
-    assert d % b == 0, (d, b)
+    if d % b:
+        raise ValueError(f"blocked_fwht: d={d} not divisible by block b={b}")
     a = d // b
-    assert a & (a - 1) == 0 and b & (b - 1) == 0, (a, b)
-    assert n % bn == 0, (n, bn)
+    if (a & (a - 1)) or (b & (b - 1)):
+        raise ValueError(f"blocked_fwht: tile split d = a*b needs both "
+                         f"powers of two, got a={a}, b={b}")
+    if n % bn:
+        raise ValueError(f"blocked_fwht: n={n} not divisible by bn={bn}; "
+                         f"pad first (kernels.ops.blocked_fwht does this)")
+    if grid_order not in (None, "n_inner", "p_inner"):
+        raise ValueError(f"blocked_fwht: unknown grid_order {grid_order!r} "
+                         f"(None|'n_inner'|'p_inner')")
     Hb = hadamard_matrix(b)
     Ha = hadamard_matrix(a)
 
     # stage 1: per-p tile, out[p*b:(p+1)*b, :] = Hb @ (D X)[p*b:(p+1)*b, :]
+    if grid_order == "p_inner":
+        grid1 = (n // bn, a)
+        ix = lambda ni, p: (p, ni)      # (p_idx, n_idx) from (outer, inner)
+        iy = lambda ni, p: (p, 0)
+    else:
+        grid1 = (a, n // bn)
+        ix = lambda p, ni: (p, ni)
+        iy = lambda p, ni: (p, 0)
     Y = pl.pallas_call(
         _stage1_kernel,
-        grid=(a, n // bn),
+        grid=grid1,
         in_specs=[
-            pl.BlockSpec((b, b), lambda p, ni: (0, 0)),
-            pl.BlockSpec((b, 1), lambda p, ni: (p, 0)),
-            pl.BlockSpec((b, bn), lambda p, ni: (p, ni)),
+            pl.BlockSpec((b, b), lambda *_: (0, 0)),
+            pl.BlockSpec((b, 1), iy),
+            pl.BlockSpec((b, bn), ix),
         ],
-        out_specs=pl.BlockSpec((b, bn), lambda p, ni: (p, ni)),
+        out_specs=pl.BlockSpec((b, bn), ix),
         out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
         interpret=interpret,
     )(Hb, signs.reshape(d, 1), X)

@@ -42,11 +42,12 @@ def _kernel(rows_ref, cols_ref, a_ref, b_ref, na_ref, nb_ref, out_ref):
     out_ref[0, 0] = dot * na * nb / jnp.maximum(sa * sb, _EPS)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "precision"))
 def sampled_rescaled_dot(As_rows: jax.Array, Bs_rows: jax.Array,
                          norm_A: jax.Array, norm_B: jax.Array,
                          rows: jax.Array, cols: jax.Array, *,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         precision: str | None = None) -> jax.Array:
     """As_rows: (n1, k), Bs_rows: (n2, k), rows/cols: (m,) int32 -> (m,) f32.
 
     ``m`` is the static sample budget: any m >= 0 works, including m = 0
@@ -54,7 +55,18 @@ def sampled_rescaled_dot(As_rows: jax.Array, Bs_rows: jax.Array,
     a zero-size grid would slice zero-size operands) and m > n1 * n2 (more
     samples than distinct entries — duplicates gather the same sketch rows,
     each grid step is independent).
+
+    ``precision='bf16'`` casts the gathered sketch rows (halves the per-step
+    row DMA — the kernel has no block knobs, this is its one tunable); the
+    body always reduces in f32, so ``None``/``'f32'`` on f32 inputs are
+    bit-identical. Norm vectors stay f32 (they rescale the final estimate).
     """
+    if precision == "bf16":
+        As_rows = As_rows.astype(jnp.bfloat16)
+        Bs_rows = Bs_rows.astype(jnp.bfloat16)
+    elif precision not in (None, "f32"):
+        raise ValueError(
+            f"unknown precision {precision!r} (None|'f32'|'bf16')")
     m = rows.shape[0]
     k = As_rows.shape[1]
     n1, n2 = As_rows.shape[0], Bs_rows.shape[0]

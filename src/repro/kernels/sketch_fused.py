@@ -71,8 +71,13 @@ def sketch_fused(Pi: jax.Array, A: jax.Array, *, bn: int = 256, bd: int = 512,
         raise ValueError(f"unknown precision {precision!r} (None|'f32'|'bf16')")
     k, d = Pi.shape
     d2, n = A.shape
-    assert d == d2, (Pi.shape, A.shape)
-    assert d % bd == 0 and n % bn == 0, (d, n, bd, bn)
+    if d != d2:
+        raise ValueError(f"sketch_fused: Pi {Pi.shape} and A {A.shape} "
+                         f"disagree on d ({d} != {d2})")
+    if d % bd or n % bn:
+        raise ValueError(f"sketch_fused: shape (d={d}, n={n}) not divisible "
+                         f"by blocks (bd={bd}, bn={bn}); pad first "
+                         f"(kernels.ops.sketch_fused does this)")
 
     grid = (n // bn, d // bd)
     out, norm2 = pl.pallas_call(

@@ -156,3 +156,15 @@ def model_flops(kind: str, n_active_params: int, tokens: int,
     """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (per step)."""
     mult = 6.0 if kind == "train" else 2.0
     return mult * n_active_params * tokens + enc_extra
+
+
+def kernel_time_lb(flops: float, hbm_bytes: float, *,
+                   peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+                   steps: int = 1, step_overhead: float = 0.0) -> float:
+    """Roofline lower bound for ONE kernel call: perfect compute/memory
+    overlap (max of the two terms, same assumption as ``Roofline.step_time``)
+    plus a fixed per-grid-step dispatch overhead. This is the scalar the
+    kernel autotuner (``repro.kernels.tuning``) ranks candidate block
+    configs on — callers derate ``peak_flops`` by MXU tile occupancy."""
+    return max(flops / peak_flops, hbm_bytes / hbm_bw) \
+        + steps * step_overhead

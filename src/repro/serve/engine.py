@@ -139,6 +139,7 @@ class SketchService:
     def __init__(self, k: int = 128, *, method: str = "gaussian",
                  backend: str = "scan", block: int = 1024,
                  precision: Optional[str] = None, probes: int = 0,
+                 tuning=None,
                  engine: Optional[pipeline.PipelineEngine] = None,
                  loop: Optional[ServingLoop] = None):
         self.k = k
@@ -147,6 +148,7 @@ class SketchService:
         self.block = block
         self.precision = precision
         self.probes = probes
+        self.tuning = tuning          # Optional[kernels.tuning.TuningSpec]
         if loop is not None and engine is not None and \
                 loop.engine is not engine:
             raise ValueError(
@@ -213,7 +215,8 @@ class SketchService:
         queue. An empty queue returns ``{}`` without touching the engine."""
         if not self._queue:
             return {}
-        futures = self._enqueue(SummaryWork(self._sketch_spec()))
+        futures = self._enqueue(SummaryWork(self._sketch_spec(),
+                                            tuning=self.tuning))
         self.loop.drain()
         return {ticket: f.result() for ticket, f in futures.items()}
 
@@ -287,7 +290,8 @@ class SketchService:
             estimation=pipeline.EstimationSpec(
                 method=est_method, backend=est_backend, m=m, T=T,
                 use_splits=use_splits),
-            rank=rank, key_layout="service", with_error=with_error)
+            rank=rank, key_layout="service", with_error=with_error,
+            tuning=self.tuning)
 
     # -- streaming accumulator sessions ------------------------------------
 

@@ -75,6 +75,7 @@ import jax.numpy as jnp
 from repro.core import pipeline
 from repro.core.pipeline import PipelineResult
 from repro.core.types import ErrorEstimate, LowRankFactors, SketchSummary
+from repro.kernels.tuning import TuningSpec
 
 #: Load-shed reasons (``Rejected.reason`` / ``LoopStats.shed`` keys).
 SHED_QUEUE_FULL = "queue_full"        # admission: depth limit exceeded
@@ -99,9 +100,17 @@ class Rejected(RuntimeError):
 
 
 class SummaryWork(NamedTuple):
-    """Step-1-only work: the request resolves to a ``SketchSummary``."""
+    """Step-1-only work: the request resolves to a ``SketchSummary``.
+
+    ``tuning`` optionally pins Pallas kernel configs (a hashable
+    ``repro.kernels.tuning.TuningSpec``) exactly like
+    ``PipelinePlan.tuning`` does for full-pipeline work; it is part of the
+    work value, hence part of the batch signature and the executable cache
+    key — warm repeat-shape traffic under a pinned tuning never re-traces.
+    """
 
     spec: pipeline.SketchSpec
+    tuning: Optional[TuningSpec] = None
 
 
 class PipelineWork(NamedTuple):
@@ -392,7 +401,7 @@ class Dispatcher:
         B = jnp.stack([r.B for r in lanes])
         work = reqs[0].work
         if isinstance(work, SummaryWork):
-            out = self.engine.summarize(work.spec, keys, A, B)
+            out = self.engine.summarize(work.spec, keys, A, B, work.tuning)
         else:
             out = self.engine.run(work.plan, keys, A, B)
         for i, req in enumerate(reqs):

@@ -20,7 +20,7 @@ def test_docs_exist_and_linked_from_readme():
     readme = (REPO / "README.md").read_text()
     for doc in ("docs/architecture.md", "docs/paper_map.md",
                 "docs/streaming.md", "docs/pipeline.md",
-                "docs/serving.md"):
+                "docs/serving.md", "docs/kernels.md"):
         assert (REPO / doc).exists(), doc
         assert doc in readme, f"README does not link {doc}"
 
@@ -40,9 +40,12 @@ def test_ci_has_docs_and_streaming_jobs():
     assert "tools/check_docs.py" in ci
     assert "--suite streaming" in ci
     assert "--suite traffic" in ci
+    assert "--suite kernels" in ci
+    assert "cancel-in-progress: true" in ci
     assert os.path.exists(REPO / "benchmarks" / "run.py")
 
 
 def test_scheduler_doctests_are_wired_into_docs_gate():
     mod = _load_check_docs()
     assert "repro.serve.scheduler" in mod.DOCTEST_MODULES
+    assert "repro.kernels.tuning" in mod.DOCTEST_MODULES

@@ -19,7 +19,8 @@ CI).
 Tracked metrics are per-record by name within each suite's ``results`` list
 (plus the nested ``traffic`` report inside ``BENCH_serving.json``):
 lower-is-better wall times / latencies / shed rate, higher-is-better
-throughput / occupancy. Records or metrics present on only one side are
+throughput / occupancy / achieved kernel bandwidth (``achieved_gbps`` from
+``BENCH_kernels.json``). Records or metrics present on only one side are
 reported as informational, not warnings.
 """
 from __future__ import annotations
@@ -41,6 +42,7 @@ TRACKED = {
     "rows_per_s": False,
     "measured_rps": False,
     "occupancy": False,
+    "achieved_gbps": False,
 }
 
 

@@ -30,6 +30,7 @@ DOCTEST_MODULES = (
     "repro.core.streaming",
     "repro.serve.engine",
     "repro.serve.scheduler",
+    "repro.kernels.tuning",
 )
 
 _LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
