@@ -96,9 +96,18 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     leaves = []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint has no leaf {key!r} — the restore template's "
+                f"pytree structure does not match the saved state (e.g. a "
+                f"decayed template against an undecayed checkpoint)")
         arr = data[key]
         expect = tuple(leaf.shape)
-        assert tuple(arr.shape) == expect, (key, arr.shape, expect)
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} but "
+                f"the restore template expects {expect} — was this "
+                f"checkpoint written with a different config?")
         if sharding_fn is not None:
             leaves.append(sharding_fn(key, arr))
         else:
@@ -133,6 +142,11 @@ def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
         "probes": (0 if state.probe_acc is None
                    else int(state.probe_acc.shape[-1])),
     }
+    if state.decay_rate is not None:
+        # the decay timestamps ride the manifest so an operator can see the
+        # state's logical clock (and pending decay) without loading arrays
+        meta.update(decay_rate=float(state.decay_rate),
+                    t_state=int(state.t_state), t_data=int(state.t_data))
     meta.update(extra or {})
     return save(ckpt_dir, step, state, keep=keep, extra=meta)
 
@@ -146,6 +160,54 @@ def restore_stream_state(ckpt_dir: str, like, step: Optional[int] = None):
     Round-trips exactly: resuming then finalizing is bit-identical to the
     uninterrupted pass (tested in tests/core/test_streaming.py).
     """
+    return restore(ckpt_dir, like, step=step)
+
+
+def save_window_state(ckpt_dir: str, step: int, wstate, *, keep: int = 3,
+                      extra: Optional[dict] = None) -> str:
+    """Checkpoint a ``streaming.WindowState`` (the whole ring at once).
+
+    A WindowState is a pytree (base key + bucket ring + head), so this is
+    ``save`` plus a manifest record of the ring geometry: ``head`` (the
+    newest live epoch — the ring index is ``head % n_buckets``),
+    ``n_buckets``, and per-bucket coverage. Restoring resumes the window
+    bit-exactly: same bucket contents, same head, same bucket keys.
+    """
+    from repro.core.streaming import WindowState
+    if not isinstance(wstate, WindowState):
+        raise ValueError(
+            f"save_window_state needs a streaming.WindowState, got "
+            f"{type(wstate).__name__} (use save_stream_state for a plain "
+            f"StreamState)")
+    meta = {
+        "kind": "window_state",
+        "head": int(wstate.head),
+        "n_buckets": wstate.n_buckets,
+        "ring_index": int(wstate.head) % wstate.n_buckets,
+        "bucket_rows_seen": [int(b.rows_seen) for b in wstate.buckets],
+        "k": int(wstate.buckets[0].A_acc.shape[0]),
+        "d_total": int(wstate.buckets[0].d_total),
+    }
+    meta.update(extra or {})
+    return save(ckpt_dir, step, wstate, keep=keep, extra=meta)
+
+
+def restore_window_state(ckpt_dir: str, like, step: Optional[int] = None):
+    """Restore a ``WindowState`` saved by ``save_window_state``.
+
+    ``like`` is a structurally matching window — in practice
+    ``WindowedSummarizer(...).init(key, shapes)`` with the same config
+    (``n_buckets`` must match: the ring is restored slot-for-slot, and the
+    saved ``head`` re-establishes which slot is current).
+    """
+    manifest = read_manifest(ckpt_dir, step=step)
+    saved = manifest.get("extra", {}).get("n_buckets")
+    have = len(like.buckets)
+    if saved is not None and saved != have:
+        raise ValueError(
+            f"checkpoint was written with n_buckets={saved} but the restore "
+            f"template has {have} buckets — window rings cannot be resized "
+            f"on restore")
     return restore(ckpt_dir, like, step=step)
 
 

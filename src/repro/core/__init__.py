@@ -13,6 +13,7 @@ Public API:
     lela / sketch_svd / optimal_rank_r / product_of_pcas  (baselines)
     distributed_sketch_summary / distributed_smppca       (multi-device pass)
     StreamingSummarizer / merge_states / finalize_state   (chunked ingestion)
+    decay_state / WindowedSummarizer / window_bucket_key  (drifting streams)
 """
 from repro.core.types import (
     ErrorEstimate, EstimateResult, LowRankFactors, SampleSet, SketchSummary,
@@ -47,5 +48,6 @@ from repro.core.distributed import (
     distributed_sketch_summary, distributed_smppca,
     distributed_streaming_summary, distributed_streaming_update)
 from repro.core.streaming import (
-    StreamingSummarizer, StreamState, finalize_state, merge_states,
-    tree_merge)
+    StreamingSummarizer, StreamState, WindowedSummarizer, WindowState,
+    decay_state, finalize_state, merge_states, tree_merge,
+    window_bucket_key)

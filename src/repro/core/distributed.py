@@ -45,7 +45,9 @@ def distributed_sketch_summary(mesh: Mesh, axis: str, key: jax.Array,
         _cast, pi_rows, srht_plan, srht_rows_from_plan)
     n_shards = mesh.shape[axis]
     d = A.shape[0]
-    assert d % n_shards == 0, "row dim must divide the mesh axis for this demo"
+    if d % n_shards != 0:
+        raise ValueError(f"row dim ({d}) must be a multiple of the mesh "
+                         f"axis size ({n_shards})")
     shard_rows = d // n_shards
     if method == "srht":
         # the plan is shard-independent (derived from key alone); jax's
@@ -135,11 +137,18 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
     parts = fn(A_slab, B_slab)
     dA, dB, dna2, dnb2 = parts[:4]
     dprobe = parts[4] if omega is not None else None
+    # A decayed delta arrives "now": its data timestamp is the state's
+    # logical clock, so the merge alignment settles the state's pending
+    # decay (gamma^(t_state - t_data), the same scalar multiply the
+    # single-device update performs) and adds the fresh rows at weight 1 —
+    # decay commutes with the psum because both are linear.
     delta = StreamState(key=None, A_acc=dA, B_acc=dB, na2=dna2, nb2=dnb2,
                         rows_seen=jnp.asarray(slab_d, jnp.int32),
                         row_high=jnp.asarray(row_offset + slab_d, jnp.int32),
                         d_total=state.d_total, signs=signs, srows=srows,
-                        omega=omega, probe_acc=dprobe)
+                        omega=omega, probe_acc=dprobe,
+                        decay_rate=state.decay_rate,
+                        t_state=state.t_state, t_data=state.t_state)
     return merge_states(state, delta)
 
 

@@ -38,6 +38,31 @@ partial states with one all-reduce), and checkpoints
 (``ckpt.checkpoint.save_stream_state`` / ``restore_stream_state`` give
 resumable passes).
 
+Drifting streams (docs/streaming.md "Drifting streams"): two summary
+variants forget old rows so ``stream_factors`` answers "top components
+*now*" instead of "top components ever":
+
+* ``StreamingSummarizer(decay=gamma)`` — exponential decay. Every logical
+  tick multiplies all previously absorbed mass by ``gamma``. The decay op
+  itself (``decay_state`` / ``Summarizer.advance``) only advances an
+  *integer timestamp* riding the state; the scalar multiply per block is
+  settled lazily at the next update/merge/finalize. Because both sides of
+  ``decay(merge(s1, s2)) == merge(decay(s1), decay(s2))`` then perform the
+  identical float ops, the law holds *bitwise* — the decayed states stay a
+  commutative monoid (property-tested in
+  tests/core/test_streaming_drift.py).
+* ``WindowedSummarizer(k, n_buckets=b)`` — sliding window over epochs: a
+  ring of ``b`` partial ``StreamState`` buckets; the window summary is the
+  merge of the live buckets and ``slide`` retires the oldest in O(1) by
+  re-initializing one ring slot. Each epoch's bucket derives its
+  projection key from the reserved fold ``window_bucket_key(key, epoch)``
+  so bucket-local row ids can repeat across epochs without randomness
+  collisions (golden-tested in tests/core/test_key_contract.py).
+
+``decay=1.0`` (the default) leaves the decay fields ``None`` — the pytree
+structure and every float op are bit-identical to the pre-decay
+``StreamState``, so all historical parity/golden suites run unchanged.
+
 >>> import jax, jax.numpy as jnp
 >>> key = jax.random.PRNGKey(0)
 >>> A = jax.random.normal(key, (64, 6))
@@ -92,6 +117,14 @@ class StreamState(NamedTuple):
     srows: Optional[jax.Array]     # (k,) SRHT sampled Hadamard rows, else None
     omega: Optional[jax.Array] = None      # (n2, p) held-out probes, else None
     probe_acc: Optional[jax.Array] = None  # (n1, p) running (A^T B) @ omega
+    decay_rate: Optional[jax.Array] = None  # () f32 per-tick retention gamma
+                                            #    in (0, 1); None = no decay
+                                            #    (bit-identical legacy path)
+    t_state: Optional[jax.Array] = None    # () int32 logical now (advanced by
+                                           #    decay_state; None w/o decay)
+    t_data: Optional[jax.Array] = None     # () int32 time the accumulators
+                                           #    are aged to (t_data <= t_state;
+                                           #    the gap is pending decay)
 
     @property
     def k(self) -> int:
@@ -102,6 +135,11 @@ class StreamState(NamedTuple):
     def n_probes(self) -> int:
         """Held-out probe count p (0 when no probe block is carried)."""
         return 0 if self.probe_acc is None else self.probe_acc.shape[-1]
+
+    @property
+    def decayed(self) -> bool:
+        """Whether this state carries the exponential-decay time algebra."""
+        return self.decay_rate is not None
 
 
 def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
@@ -116,6 +154,17 @@ def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
     if (s1.probe_acc is None) != (s2.probe_acc is None):
         raise ValueError("cannot merge a probe-carrying stream state with a "
                          "probe-free one (init both with the same probes=)")
+    if (s1.decay_rate is None) != (s2.decay_rate is None):
+        raise ValueError(
+            "cannot merge a decayed stream state with an undecayed one "
+            "(init both with the same decay=)")
+    if (s1.decay_rate is not None
+            and not isinstance(s1.decay_rate, jax.core.Tracer)
+            and not isinstance(s2.decay_rate, jax.core.Tracer)
+            and float(s1.decay_rate) != float(s2.decay_rate)):
+        raise ValueError(
+            f"cannot merge stream states with different decay rates: "
+            f"{float(s1.decay_rate)} vs {float(s2.decay_rate)}")
 
 
 def _check_row_bounds(state: StreamState, lo: int, hi: int) -> None:
@@ -135,14 +184,94 @@ def _check_row_bounds(state: StreamState, lo: int, hi: int) -> None:
             f"streamed dimension d_total={d} from init()")
 
 
+def _scale_blocks(state: StreamState, factor) -> StreamState:
+    """Multiply every linear accumulator block (sketches, squared norms, and
+    the probe block) by one scalar — decay settlement is exactly this."""
+    return state._replace(
+        A_acc=state.A_acc * factor,
+        B_acc=state.B_acc * factor,
+        na2=state.na2 * factor,
+        nb2=state.nb2 * factor,
+        probe_acc=(None if state.probe_acc is None
+                   else state.probe_acc * factor))
+
+
+def _concrete_eq(a, b) -> bool:
+    """True when both scalars are concrete and equal (False under tracing —
+    the caller then takes the general traceable path)."""
+    if isinstance(a, jax.core.Tracer) or isinstance(b, jax.core.Tracer):
+        return False
+    return int(a) == int(b)
+
+
+def _settle_state(state: StreamState) -> StreamState:
+    """Apply pending decay eagerly: age the accumulators from ``t_data`` up
+    to ``t_state`` (one scalar multiply per block; a no-op without decay or
+    when nothing is pending)."""
+    if state.decay_rate is None or _concrete_eq(state.t_state, state.t_data):
+        return state
+    factor = state.decay_rate ** (state.t_state - state.t_data)
+    return _scale_blocks(state, factor)._replace(t_data=state.t_state)
+
+
+def decay_state(state: StreamState, dt: int = 1) -> StreamState:
+    """Advance the state's logical clock by ``dt`` ticks (the decay op).
+
+    Each tick multiplies all *previously absorbed* mass by the state's
+    ``decay_rate`` — but lazily: only the integer timestamp moves here, and
+    the scalar multiply per block settles at the next update / merge
+    alignment / finalize. That laziness is what makes
+    ``decay_state(merge_states(s1, s2), dt)`` bitwise equal to
+    ``merge_states(decay_state(s1, dt), decay_state(s2, dt))``: both sides
+    run the identical float ops in the identical order. On an undecayed
+    state (``decay_rate is None``, i.e. ``decay=1.0``) this is the
+    identity. ``dt`` must be a non-negative integer (time only advances).
+    """
+    if not isinstance(dt, jax.core.Tracer):
+        dt = int(dt)
+        if dt < 0:
+            raise ValueError(
+                f"decay_state needs a non-negative tick count, got dt={dt}")
+        if dt == 0:
+            return state
+    if state.decay_rate is None:
+        return state
+    return state._replace(t_state=state.t_state + jnp.asarray(dt, jnp.int32))
+
+
+def _align_states(s1: StreamState, s2: StreamState
+                  ) -> Tuple[StreamState, StreamState]:
+    """Age both decayed operands to the later ``t_data`` so ``merge`` can be
+    a plain sum. Symmetric in (s1, s2) — the basis of bitwise merge
+    commutativity — and the side already at the common timestamp is left
+    untouched."""
+    td = jnp.maximum(s1.t_data, s2.t_data)
+
+    def _age(s: StreamState) -> StreamState:
+        if _concrete_eq(s.t_data, td):
+            return s._replace(t_data=td)
+        return _scale_blocks(s, s.decay_rate ** (td - s.t_data)
+                             )._replace(t_data=td)
+
+    return _age(s1), _age(s2)
+
+
 def merge_states(s1: StreamState, s2: StreamState) -> StreamState:
     """Combine summaries of disjoint row sets (the monoid operation).
 
     A plain sum on every accumulator field: commutative bit-for-bit,
     associative to float reassociation. The key/plan are taken from ``s1``
-    (both operands must descend from the same ``init``).
+    (both operands must descend from the same ``init``). Decayed states are
+    first aligned to a common data timestamp (the older side is aged by one
+    scalar multiply per block); the merged clock is the later of the two —
+    so merging never rewinds time, and pending decay stays pending.
     """
     _check_mergeable(s1, s2)
+    extra = {}
+    if s1.decay_rate is not None:
+        s1, s2 = _align_states(s1, s2)
+        extra = dict(t_state=jnp.maximum(s1.t_state, s2.t_state),
+                     t_data=s1.t_data)
     return s1._replace(
         A_acc=s1.A_acc + s2.A_acc,
         B_acc=s1.B_acc + s2.B_acc,
@@ -151,7 +280,8 @@ def merge_states(s1: StreamState, s2: StreamState) -> StreamState:
         rows_seen=s1.rows_seen + s2.rows_seen,
         row_high=jnp.maximum(s1.row_high, s2.row_high),
         probe_acc=(None if s1.probe_acc is None
-                   else s1.probe_acc + s2.probe_acc))
+                   else s1.probe_acc + s2.probe_acc),
+        **extra)
 
 
 def tree_merge(states: Sequence[StreamState]) -> StreamState:
@@ -171,7 +301,12 @@ def tree_merge(states: Sequence[StreamState]) -> StreamState:
 
 def finalize_state(state: StreamState) -> SketchSummary:
     """StreamState -> the Step-1 ``SketchSummary`` (sqrt the squared norms;
-    the probe block and its test matrix ride along when carried)."""
+    the probe block and its test matrix ride along when carried). Pending
+    decay is settled first, so the summary — including the probe block the
+    ErrorEngine reads — describes the *decayed* product as of ``t_state``:
+    ``estimate_error`` stays unbiased for exactly what the factors
+    estimate."""
+    state = _settle_state(state)
     return SketchSummary(state.A_acc, state.B_acc,
                          jnp.sqrt(state.na2), jnp.sqrt(state.nb2),
                          probes=state.probe_acc, probe_omega=state.omega)
@@ -226,14 +361,20 @@ class StreamingSummarizer:
     """
 
     def __init__(self, k: int, *, method: str = "gaussian",
-                 precision: Optional[str] = None, probes: int = 0):
+                 precision: Optional[str] = None, probes: int = 0,
+                 decay: float = 1.0):
         if method not in METHODS:
             raise ValueError(
                 f"unknown sketch method {method!r} (use {METHODS})")
+        if isinstance(decay, bool) or not isinstance(decay, (int, float)) \
+                or not 0.0 < float(decay) <= 1.0:
+            raise ValueError(
+                f"decay must be a retention factor in (0, 1], got {decay!r}")
         self.k = k
         self.method = method
         self.precision = precision
         self.probes = probes
+        self.decay = float(decay)
 
     # -- contract ----------------------------------------------------------
 
@@ -256,6 +397,14 @@ class StreamingSummarizer:
             probe_acc = jnp.zeros((n1, self.probes), jnp.float32)
         else:
             omega = probe_acc = None
+        if self.decay < 1.0:
+            decay_rate = jnp.asarray(self.decay, jnp.float32)
+            t_state = t_data = jnp.zeros((), jnp.int32)
+        else:
+            # decay=1.0 keeps the legacy pytree structure: the None fields
+            # flatten to nothing, so every historical bit-parity and
+            # checkpoint contract is untouched
+            decay_rate = t_state = t_data = None
         return StreamState(
             key=key,
             A_acc=jnp.zeros((self.k, n1), jnp.float32),
@@ -265,7 +414,8 @@ class StreamingSummarizer:
             rows_seen=jnp.zeros((), jnp.int32),
             row_high=jnp.zeros((), jnp.int32),
             d_total=jnp.asarray(d, jnp.int32),
-            signs=signs, srows=srows, omega=omega, probe_acc=probe_acc)
+            signs=signs, srows=srows, omega=omega, probe_acc=probe_acc,
+            decay_rate=decay_rate, t_state=t_state, t_data=t_data)
 
     def update(self, state: StreamState, A_chunk: jax.Array,
                B_chunk: jax.Array, row_offset) -> StreamState:
@@ -322,6 +472,11 @@ class StreamingSummarizer:
         """Alias of ``merge_states`` (module-level, needs no config)."""
         return merge_states(s1, s2)
 
+    def advance(self, state: StreamState, dt: int = 1) -> StreamState:
+        """Alias of ``decay_state``: advance the logical clock ``dt`` ticks
+        (identity on an undecayed summarizer — ``decay=1.0``)."""
+        return decay_state(state, dt)
+
     def finalize(self, state: StreamState) -> SketchSummary:
         """Alias of ``finalize_state`` (module-level, needs no config)."""
         return finalize_state(state)
@@ -345,6 +500,10 @@ class StreamingSummarizer:
         if A_chunk.shape[0] != B_chunk.shape[0]:
             raise ValueError(f"chunk row counts differ: "
                              f"{A_chunk.shape} vs {B_chunk.shape}")
+        # Settle pending decay *before* absorbing: new rows enter at weight
+        # 1 (they arrive "now"), old mass is physically scaled down so
+        # accumulator magnitudes stay bounded on long decayed streams.
+        state = _settle_state(state)
         dA, dB, dna2, dnb2 = _chunk_contribution(
             state.key, state.signs, state.srows, A_chunk, B_chunk, gids,
             k=self.k, method=self.method, precision=self.precision)
@@ -359,3 +518,191 @@ class StreamingSummarizer:
             row_high=jnp.maximum(state.row_high,
                                  jnp.asarray(hi1, jnp.int32)),
             probe_acc=probe_acc)
+
+
+# -- sliding window over epochs ----------------------------------------------
+
+_WINDOW_TAG = 0x77647721  # ascii "wdw!" — reserved fold tag for bucket keys
+
+
+def window_bucket_key(key: jax.Array, epoch) -> jax.Array:
+    """Projection key for the window bucket holding ``epoch``.
+
+    Two-level reserved fold (the tenant/probe scheme): fold the window tag
+    first, then the epoch — so bucket keys can never collide with row folds,
+    tenant folds, or probe folds of the same base key, and bucket-local row
+    ids may repeat across epochs without reusing projection columns.
+    Golden-pinned in tests/core/test_key_contract.py.
+    """
+    if not isinstance(epoch, jax.core.Tracer):
+        epoch = int(epoch)
+        if epoch < 0:
+            raise ValueError(
+                f"window epoch must be non-negative, got {epoch}")
+    return jax.random.fold_in(jax.random.fold_in(key, _WINDOW_TAG), epoch)
+
+
+class WindowState(NamedTuple):
+    """Sliding-window summary: a ring of per-epoch partial ``StreamState``s.
+
+    ``buckets[e % n_buckets]`` holds epoch ``e``'s rows; ``head`` is the
+    newest live epoch, so the window always covers epochs
+    ``head - n_buckets + 1 .. head`` (every slot is live — a fresh window
+    starts at ``head = n_buckets - 1`` over all-empty past epochs). The
+    whole thing is a pytree: it checkpoints via
+    ``ckpt.checkpoint.save_window_state`` with ``head`` in the manifest.
+    """
+
+    key: jax.Array                    # base PRNG key (bucket keys fold from it)
+    buckets: Tuple[StreamState, ...]  # ring; slot e % n_buckets holds epoch e
+    head: jax.Array                   # () int32 newest live epoch
+
+    @property
+    def n_buckets(self) -> int:
+        """Ring size (the window length in epochs)."""
+        return len(self.buckets)
+
+
+class WindowedSummarizer:
+    """Sliding-window front-end: the summary of the last ``n_buckets`` epochs.
+
+    Keeps a ring of ``n_buckets`` partial ``StreamState``s (one per epoch,
+    each under its own ``window_bucket_key``); the window summary is the
+    merge of the live buckets, and ``slide`` retires the oldest epoch in
+    O(1) by re-initializing a single ring slot — no rescan, no subtraction.
+    Updates land in the head epoch with *bucket-local* row ids (each epoch
+    is its own 0..d-1 row space). The ring bookkeeping is host-side eager
+    (slot selection needs a concrete ``head``); the per-bucket math is the
+    jitted StreamingSummarizer path unchanged.
+
+    With probes, every bucket shares the *base* key's probe test matrix
+    (``probe_omega(key, n2, p)``) — probe blocks are linear in the data, so
+    they merge across buckets only against a common omega, and the window's
+    ``estimate_error`` stays unbiased for the windowed product.
+
+    >>> import jax, jax.numpy as jnp
+    >>> win = WindowedSummarizer(k=4, n_buckets=2)
+    >>> key = jax.random.PRNGKey(0)
+    >>> A = jax.random.normal(key, (8, 3))
+    >>> B = jax.random.normal(jax.random.fold_in(key, 1), (8, 2))
+    >>> w = win.init(key, (8, 3, 2))
+    >>> w = win.update(w, A, B, 0)   # rows land in the head epoch
+    >>> w = win.slide(w)             # next epoch opens, oldest expires
+    >>> int(jnp.sum(win.merged(w).rows_seen))   # still inside the window
+    8
+    >>> w = win.slide(w)             # the epoch holding those rows expires
+    >>> bool(jnp.all(win.finalize(w).A_sketch == 0))
+    True
+    """
+
+    def __init__(self, k: int, n_buckets: int, *,
+                 method: str = "gaussian",
+                 precision: Optional[str] = None, probes: int = 0):
+        if isinstance(n_buckets, bool) or not isinstance(n_buckets, int) \
+                or n_buckets < 1:
+            raise ValueError(
+                f"n_buckets must be a positive int (the window length in "
+                f"epochs), got {n_buckets!r}")
+        self.n_buckets = n_buckets
+        self._inner = StreamingSummarizer(
+            k, method=method, precision=precision, probes=probes)
+
+    @property
+    def k(self) -> int:
+        """Sketch size of every bucket."""
+        return self._inner.k
+
+    @property
+    def method(self) -> str:
+        """Sketch method of every bucket."""
+        return self._inner.method
+
+    @property
+    def probes(self) -> int:
+        """Held-out probe count carried by every bucket."""
+        return self._inner.probes
+
+    def _fresh_bucket(self, key, shapes, epoch, omega) -> StreamState:
+        bucket = self._inner.init(window_bucket_key(key, epoch), shapes)
+        if omega is not None:
+            # all buckets share the BASE key's probe matrix: probe blocks
+            # only sum across buckets against a common omega
+            bucket = bucket._replace(omega=omega)
+        return bucket
+
+    def init(self, key: jax.Array,
+             shapes: Tuple[int, int, int]) -> WindowState:
+        """Empty window for a (d, n1, n2) stream: ``head = n_buckets - 1``
+        over all-empty epochs ``0 .. n_buckets - 1`` (``d`` is the per-epoch
+        row space — bucket-local ids restart each epoch)."""
+        if self._inner.probes:
+            from repro.core.error_engine import probe_omega
+            omega = probe_omega(key, shapes[2], self._inner.probes)
+        else:
+            omega = None
+        buckets = tuple(self._fresh_bucket(key, shapes, e, omega)
+                        for e in range(self.n_buckets))
+        return WindowState(key=key, buckets=buckets,
+                           head=jnp.asarray(self.n_buckets - 1, jnp.int32))
+
+    def _check_ring(self, wstate: WindowState) -> None:
+        if len(wstate.buckets) != self.n_buckets:
+            raise ValueError(
+                f"window state carries {len(wstate.buckets)} buckets but "
+                f"this summarizer expects n_buckets={self.n_buckets}")
+
+    def _with_head_bucket(self, wstate, bucket) -> WindowState:
+        slot = int(wstate.head) % self.n_buckets
+        buckets = list(wstate.buckets)
+        buckets[slot] = bucket
+        return wstate._replace(buckets=tuple(buckets))
+
+    def update(self, wstate: WindowState, A_chunk, B_chunk,
+               row_offset) -> WindowState:
+        """Absorb a contiguous chunk into the head epoch (bucket-local
+        ``row_offset``)."""
+        self._check_ring(wstate)
+        slot = int(wstate.head) % self.n_buckets
+        return self._with_head_bucket(wstate, self._inner.update(
+            wstate.buckets[slot], A_chunk, B_chunk, row_offset))
+
+    def update_rows(self, wstate: WindowState, row_ids, A_rows,
+                    B_rows) -> WindowState:
+        """Absorb rows with explicit bucket-local ids into the head epoch."""
+        self._check_ring(wstate)
+        slot = int(wstate.head) % self.n_buckets
+        return self._with_head_bucket(wstate, self._inner.update_rows(
+            wstate.buckets[slot], row_ids, A_rows, B_rows))
+
+    def slide(self, wstate: WindowState, n: int = 1) -> WindowState:
+        """Advance the window by ``n`` epochs — O(1) per epoch: the expiring
+        slot is re-initialized (under the *new* epoch's bucket key), nothing
+        else is touched."""
+        self._check_ring(wstate)
+        if isinstance(n, bool) or not isinstance(n, int) or n < 1:
+            raise ValueError(
+                f"slide needs a positive epoch count, got {n!r}")
+        ref = wstate.buckets[0]
+        shapes = (int(ref.d_total), ref.A_acc.shape[1], ref.B_acc.shape[1])
+        head = int(wstate.head)
+        buckets = list(wstate.buckets)
+        for _ in range(n):
+            head += 1
+            buckets[head % self.n_buckets] = self._fresh_bucket(
+                wstate.key, shapes, head, ref.omega)
+        return wstate._replace(buckets=tuple(buckets),
+                               head=jnp.asarray(head, jnp.int32))
+
+    def merged(self, wstate: WindowState) -> StreamState:
+        """The window as one ``StreamState``: live buckets merged in
+        ascending epoch order (a fixed merge tree, so a window rebuilt from
+        the same buckets merges bit-identically)."""
+        self._check_ring(wstate)
+        head = int(wstate.head)
+        return tree_merge([wstate.buckets[e % self.n_buckets]
+                           for e in range(head - self.n_buckets + 1,
+                                          head + 1)])
+
+    def finalize(self, wstate: WindowState) -> SketchSummary:
+        """Finalize the merged window into a Step-1 ``SketchSummary``."""
+        return finalize_state(self.merged(wstate))

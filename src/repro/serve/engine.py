@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline
-from repro.core.streaming import StreamingSummarizer, StreamState
+from repro.core.streaming import (
+    StreamingSummarizer, StreamState, WindowedSummarizer, WindowState)
 from repro.core.types import SketchSummary
 from repro.models.factory import Model
 from repro.serve.scheduler import (
@@ -77,10 +78,16 @@ class Engine:
 
 @dataclasses.dataclass
 class _StreamSession:
-    """One live accumulator: its summarizer config, state, and append cursor."""
+    """One live accumulator: its summarizer config, state, and append cursor.
+
+    ``summarizer``/``state`` are either a ``StreamingSummarizer`` driving a
+    ``StreamState`` (vanilla or decayed) or a ``WindowedSummarizer`` driving
+    a ``WindowState`` — both expose the same update/finalize surface, so
+    the session methods never branch on the variant except in
+    ``advance_stream`` (decay tick vs. window slide)."""
     key: jax.Array
-    summarizer: StreamingSummarizer
-    state: StreamState
+    summarizer: Union[StreamingSummarizer, WindowedSummarizer]
+    state: Union[StreamState, WindowState]
     next_row: int
     rows_seen: int
 
@@ -296,7 +303,9 @@ class SketchService:
     # -- streaming accumulator sessions ------------------------------------
 
     def open_stream(self, key: jax.Array, d: int, n1: int, n2: int, *,
-                    state: Optional[StreamState] = None) -> int:
+                    state: Optional[Union[StreamState, WindowState]] = None,
+                    decay: float = 1.0,
+                    window: Optional[int] = None) -> int:
         """Open a stateful accumulator session for a (d, n1, n2) stream.
 
         The session inherits the service's ``k``/``method``/``precision``.
@@ -307,12 +316,34 @@ class SketchService:
         a mismatched key would silently break the documented parity between
         ``stream_factors`` and one-shot ``flush_factors``). Returns the
         stream id.
+
+        Drifting streams (docs/streaming.md): ``decay=gamma`` opens an
+        exponentially-decayed session (``advance_stream`` ticks its clock);
+        ``window=b`` opens a sliding-window session over ``b`` epochs
+        (``advance_stream`` slides it; ``d`` becomes the per-epoch row
+        space and the append cursor restarts each epoch). The two policies
+        are mutually exclusive. ``decay=1.0`` / ``window=None`` is
+        bit-identical to the historical session path. To resume a windowed
+        session pass a ``WindowState`` from ``restore_window_state``.
         """
+        if decay != 1.0 and window is not None:
+            raise ValueError(
+                f"pass decay= OR window=, not both (got decay={decay}, "
+                f"window={window}): a session forgets by exponential decay "
+                f"or by sliding window, not both at once")
+        if window is not None:
+            return self._open_window_stream(key, d, n1, n2,
+                                            n_buckets=window, state=state)
         summ = StreamingSummarizer(self.k, method=self.method,
                                    precision=self.precision,
-                                   probes=self.probes)
+                                   probes=self.probes, decay=decay)
         if state is None:
             state = summ.init(key, (d, n1, n2))
+        elif isinstance(state, WindowState):
+            raise ValueError(
+                "resumed state is a WindowState but the session was opened "
+                "without window= — pass window=<n_buckets> to resume a "
+                "windowed session")
         else:
             shapes = (state.A_acc.shape, state.B_acc.shape,
                       int(state.d_total))
@@ -343,12 +374,89 @@ class SketchService:
                 raise ValueError(
                     f"resumed state method does not match the service's "
                     f"method={self.method!r}")
+            if state.decayed != (decay < 1.0):
+                raise ValueError(
+                    f"resumed state {'carries' if state.decayed else 'has no'}"
+                    f" decay clock but the session was opened with "
+                    f"decay={decay} — a pass cannot change its decay policy "
+                    f"mid-stream")
+            if state.decayed and float(state.decay_rate) != float(decay):
+                raise ValueError(
+                    f"resumed state was decayed at rate "
+                    f"{float(state.decay_rate)} but the session was opened "
+                    f"with decay={decay}")
         sid = self._next_stream
         self._next_stream += 1
         self._streams[sid] = _StreamSession(
             key=key, summarizer=summ, state=state,
             next_row=int(state.row_high), rows_seen=int(state.rows_seen))
         return sid
+
+    def _open_window_stream(self, key, d, n1, n2, *, n_buckets, state) -> int:
+        summ = WindowedSummarizer(self.k, n_buckets, method=self.method,
+                                  precision=self.precision,
+                                  probes=self.probes)
+        if state is None:
+            state = summ.init(key, (d, n1, n2))
+        else:
+            if not isinstance(state, WindowState):
+                raise ValueError(
+                    f"resuming a windowed session needs a WindowState from "
+                    f"restore_window_state, got {type(state).__name__}")
+            if len(state.buckets) != n_buckets:
+                raise ValueError(
+                    f"resumed window carries {len(state.buckets)} buckets "
+                    f"but the session was opened with window={n_buckets} — "
+                    f"window rings cannot be resized on resume")
+            ref = state.buckets[0]
+            shapes = (ref.A_acc.shape, ref.B_acc.shape, int(ref.d_total))
+            want = ((self.k, n1), (self.k, n2), d)
+            if shapes != want:
+                raise ValueError(
+                    f"resumed window does not match this session: buckets "
+                    f"have (A_acc, B_acc, d_total) = {shapes}, session "
+                    f"needs {want}")
+            if ref.n_probes != self.probes:
+                raise ValueError(
+                    f"resumed window carries {ref.n_probes} probe columns "
+                    f"but the service is configured with probes="
+                    f"{self.probes}")
+            if not jnp.array_equal(state.key, key):
+                raise ValueError(
+                    "resumed window carries a different base key than the "
+                    "session key — bucket keys fold from the base key, so "
+                    "the randomness would disagree; pass the key the "
+                    "window was started with")
+        sid = self._next_stream
+        self._next_stream += 1
+        slot = int(state.head) % n_buckets
+        self._streams[sid] = _StreamSession(
+            key=key, summarizer=summ, state=state,
+            next_row=int(state.buckets[slot].row_high),
+            rows_seen=sum(int(b.rows_seen) for b in state.buckets))
+        return sid
+
+    def advance_stream(self, stream_id: int, dt: int = 1) -> None:
+        """Tick a drifting session's time axis by ``dt``.
+
+        Decayed sessions advance their logical clock (each tick multiplies
+        previously absorbed mass by the session's ``decay``, settled
+        lazily); windowed sessions slide ``dt`` epochs (the oldest buckets
+        expire and the append cursor restarts at 0 for the new head epoch).
+        Raises ``ValueError`` on a vanilla session — it has no time axis;
+        open the stream with ``decay=`` or ``window=``. Raises ``KeyError``
+        naming the id when the stream is unknown or closed.
+        """
+        sess = self._session(stream_id)
+        if isinstance(sess.summarizer, WindowedSummarizer):
+            sess.state = sess.summarizer.slide(sess.state, dt)
+            sess.next_row = 0
+        elif sess.summarizer.decay < 1.0:
+            sess.state = sess.summarizer.advance(sess.state, dt)
+        else:
+            raise ValueError(
+                f"stream {stream_id} has no time axis — open it with "
+                f"decay= or window= to advance/slide it")
 
     def _session(self, stream_id: int) -> _StreamSession:
         """The live session for an id, or a descriptive ``KeyError`` — an

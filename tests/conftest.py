@@ -70,6 +70,37 @@ def known_spectrum_pair(key, d, n1, n2, spectrum):
     return W, W @ M, M
 
 
+def drifting_spectrum_pair(key, d=256, n1=14, n2=12, q=3):
+    """Two-phase piecewise-stationary stream with disjoint top subspaces.
+
+    Returns ``((A1, B1, M1, U1), (A2, B2, M2, U2))``: phase i satisfies
+    ``Ai^T Bi == Mi`` exactly with top-q left singular subspace ``Ui``, and
+    ``U1 ⟂ U2`` (drawn as disjoint column blocks of one orthonormal basis).
+    Phase 1 carries 4x the singular mass, so after the flip a cumulative
+    (vanilla) summary keeps answering ``U1`` while a decayed/windowed
+    summary recovers ``U2`` — drift tests assert subspace recovery instead
+    of eyeballing error curves.
+    """
+    kW1, kW2, kU, kV1, kV2 = jax.random.split(key, 5)
+    U_all, _ = jnp.linalg.qr(jax.random.normal(kU, (n1, 2 * q)))
+    U1, U2 = U_all[:, :q], U_all[:, q:]
+    V1, _ = jnp.linalg.qr(jax.random.normal(kV1, (n2, q)))
+    V2, _ = jnp.linalg.qr(jax.random.normal(kV2, (n2, q)))
+    # flat within-phase spectrum: the drift IS the subspace flip, and a
+    # clean top-q gap keeps recovery assertions well above the sketch noise
+    M1 = 8.0 * U1 @ V1.T
+    M2 = 4.0 * U2 @ V2.T
+    W1, _ = jnp.linalg.qr(jax.random.normal(kW1, (d, n1)))
+    W2, _ = jnp.linalg.qr(jax.random.normal(kW2, (d, n1)))
+    return (W1, W1 @ M1, M1, U1), (W2, W2 @ M2, M2, U2)
+
+
+@pytest.fixture()
+def drifting_pair(key):
+    """The two-phase drifting stream at the default test geometry."""
+    return drifting_spectrum_pair(key)
+
+
 @pytest.fixture(params=["fast", "slow", "rank_deficient"])
 def spectrum_case(request, key):
     """(kind, A, B, M, spectrum) across the three known-spectrum profiles:

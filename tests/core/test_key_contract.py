@@ -47,6 +47,14 @@ SERVICE_EST_KEY = [928981903, 3453687069]
 # reserved two-level probe fold ("prob", "e!")
 PROBE_KEY = [3361526193, 307077598]
 
+# fold_in(PRNGKey(0), 0x77647721) — the reserved window tag fold ("wdw!"),
+# and the full two-level window_bucket_key derivation for epochs 0, 1, 5:
+# fold_in(WINDOW_TAG_FOLD, epoch)
+WINDOW_TAG_FOLD = [2296611242, 153240566]
+WINDOW_KEYS = {0: [1127536114, 704093423],
+               1: [1755690605, 2856154744],
+               5: [1564771073, 3152420000]}
+
 # fold_in(PRNGKey(0), 0x746E7421) — the reserved tenant tag fold ("tnt!"),
 # and the full two-level tenant_key derivation for a str and an int tenant:
 # fold_in(TENANT_TAG_FOLD, tenant_id) with tenant_id("acme") = crc32 masked
@@ -243,6 +251,39 @@ def test_tenant_key_tree(key):
     for bad in (True, 3.5, None, -1, 2 ** 31):
         with pytest.raises((TypeError, ValueError)):
             pipeline.tenant_id(bad)
+
+
+def test_window_bucket_key_tree(key):
+    """The sliding window's per-epoch bucket keys are frozen: the reserved
+    two-level ``fold_in(fold_in(key, 0x77647721), epoch)`` fold ("wdw!"),
+    and a WindowedSummarizer bucket's carried key and sketch contents are
+    exactly those of a plain summarizer initialized at the golden key —
+    while the probe test matrix stays the BASE key's (probe blocks only
+    merge across buckets against a shared omega)."""
+    from repro.core.streaming import (
+        StreamingSummarizer, WindowedSummarizer, window_bucket_key)
+    _eq(jax.random.fold_in(key, 0x77647721), WINDOW_TAG_FOLD)
+    for epoch, kd in WINDOW_KEYS.items():
+        _eq(window_bucket_key(key, epoch), kd)
+
+    win = WindowedSummarizer(8, 2, probes=3)
+    w = win.init(key, (64, 6, 4))
+    A = jax.random.normal(key, (64, 6))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (64, 4))
+    w = win.slide(w, 4)                       # head: 1 -> 5
+    w = win.update(w, A, B, 0)                # rows land in epoch 5's bucket
+    bucket = w.buckets[5 % 2]
+    _eq(bucket.key, WINDOW_KEYS[5])
+    manual = StreamingSummarizer(8, probes=3)
+    ref = manual.init(jnp.asarray(WINDOW_KEYS[5], jnp.uint32), (64, 6, 4))
+    ref = ref._replace(omega=probe_omega(key, 4, 3))   # the shared base omega
+    ref = manual.update(ref, A, B, 0)
+    np.testing.assert_array_equal(np.asarray(bucket.A_acc),
+                                  np.asarray(ref.A_acc))
+    np.testing.assert_array_equal(np.asarray(bucket.probe_acc),
+                                  np.asarray(ref.probe_acc))
+    np.testing.assert_array_equal(np.asarray(bucket.omega),
+                                  np.asarray(probe_omega(key, 4, 3)))
 
 
 def test_probe_key_tree(key):

@@ -1,0 +1,551 @@
+"""Drift-aware summary tests: decay/window algebra, recovery, lifecycle.
+
+The contract (docs/streaming.md "Drifting streams"):
+
+* exponential decay is *exactly* compatible with the monoid —
+  ``decay(merge(s1, s2)) == merge(decay(s1), decay(s2))`` bit-for-bit
+  (laziness: decay only moves an integer timestamp; settlement runs the
+  identical float ops on both sides), merge stays bit-commutative, and
+  ``decay=1.0`` is bit-identical to the vanilla ``StreamState`` path;
+* the sliding window is a ring of per-epoch buckets under reserved-fold
+  keys: the merged window equals the same buckets rebuilt independently,
+  bit-for-bit, and sliding is O(1) forgetting;
+* both variants checkpoint/resume bit-exactly (timestamps and ring index
+  ride the manifest) and serve through ``SketchService`` sessions;
+* on a piecewise-stationary stream (``drifting_spectrum_pair``) the
+  decayed/windowed summaries recover the phase-2 subspace after the flip
+  while the cumulative summary does not.
+
+Every new ``ValueError`` raise path in core/streaming.py and
+ckpt/checkpoint.py is exercised here by message.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from tests._hyp import given, settings
+    from tests._hyp import strategies as st
+
+from repro import core
+from repro.core.error_engine import probe_omega
+from repro.core.streaming import (
+    StreamingSummarizer, WindowedSummarizer, WindowState, decay_state,
+    finalize_state, merge_states, tree_merge, window_bucket_key)
+from repro.ckpt import checkpoint
+from tests.conftest import drifting_spectrum_pair, gaussian_pair as _pair
+
+D, N1, N2 = 192, 11, 7
+
+
+def _assert_states_bit_equal(s1, s2, msg=""):
+    """Pytree structure AND every leaf bit-for-bit."""
+    assert jax.tree.structure(s1) == jax.tree.structure(s2), msg
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=msg)
+
+
+def _make_pair(seed=0, d=D):
+    return _pair(jax.random.PRNGKey(seed), d=d)
+
+
+# ---------------------------------------------------------------------------
+# The decay algebra (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(split=st.sampled_from([32, 64, 96, 128]),
+       dt=st.integers(0, 5),
+       gamma=st.sampled_from([0.5, 0.9, 0.99]))
+def test_decay_merge_commutation_bitwise(split, dt, gamma):
+    """decay(merge(s1, s2)) == merge(decay(s1), decay(s2)), BIT-FOR-BIT:
+    the decay op only advances the integer clock, so both sides settle with
+    the identical float ops (the tentpole law)."""
+    key = jax.random.PRNGKey(3)
+    A, B = _make_pair(3)
+    summ = StreamingSummarizer(8, probes=2, decay=gamma)
+    s1 = summ.update(summ.init(key, (D, N1, N2)), A[:split], B[:split], 0)
+    s2 = summ.update(summ.init(key, (D, N1, N2)), A[split:], B[split:],
+                     split)
+    lhs = decay_state(merge_states(s1, s2), dt)
+    rhs = merge_states(decay_state(s1, dt), decay_state(s2, dt))
+    _assert_states_bit_equal(lhs, rhs, f"split={split} dt={dt} g={gamma}")
+    # and the law survives finalization (settlement) too
+    _assert_states_bit_equal(finalize_state(lhs), finalize_state(rhs))
+
+
+@settings(deadline=None, max_examples=8)
+@given(split=st.sampled_from([32, 64, 96]),
+       dt1=st.integers(0, 4), dt2=st.integers(0, 4))
+def test_decayed_merge_commutative_bitwise(split, dt1, dt2):
+    """merge stays bit-commutative on decayed states even when the two
+    operands sit at different logical times (the alignment is symmetric)."""
+    key = jax.random.PRNGKey(5)
+    A, B = _make_pair(5)
+    summ = StreamingSummarizer(8, probes=2, decay=0.9)
+    s1 = decay_state(
+        summ.update(summ.init(key, (D, N1, N2)), A[:split], B[:split], 0),
+        dt1)
+    s2 = decay_state(
+        summ.update(summ.init(key, (D, N1, N2)), A[split:], B[split:],
+                    split), dt2)
+    _assert_states_bit_equal(merge_states(s1, s2), merge_states(s2, s1))
+
+
+@settings(deadline=None, max_examples=6)
+@given(i=st.sampled_from([32, 64]), j=st.sampled_from([96, 128]),
+       dt=st.integers(0, 3))
+def test_decayed_monoid_associative(i, j, dt):
+    """Reassociating the merge tree of decayed partials agrees to float
+    tolerance (the settlement factors multiply out the same either way)."""
+    key = jax.random.PRNGKey(7)
+    A, B = _make_pair(7)
+    summ = StreamingSummarizer(8, decay=0.9)
+    parts = [summ.update(summ.init(key, (D, N1, N2)), A[a:b], B[a:b], a)
+             for a, b in ((0, i), (i, j), (j, D))]
+    parts = [decay_state(s, n) for s, n in zip(parts, (dt, 0, dt))]
+    left = merge_states(merge_states(parts[0], parts[1]), parts[2])
+    right = merge_states(parts[0], merge_states(parts[1], parts[2]))
+    lf, rf = finalize_state(left), finalize_state(right)
+    for name in ("A_sketch", "B_sketch", "norm_A", "norm_B"):
+        np.testing.assert_allclose(np.asarray(getattr(lf, name)),
+                                   np.asarray(getattr(rf, name)),
+                                   rtol=2e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(chunk=st.sampled_from([32, 48, 64, 192]))
+def test_decay_one_bit_parity_with_vanilla(chunk):
+    """decay=1.0 is the vanilla path, bit-for-bit: identical pytree
+    structure, identical leaves, after any chunking — every historical
+    parity/golden suite keeps its meaning."""
+    key = jax.random.PRNGKey(11)
+    A, B = _make_pair(11)
+    plain = StreamingSummarizer(8, probes=2)
+    one = StreamingSummarizer(8, probes=2, decay=1.0)
+
+    def run(summ):
+        s = summ.init(key, (D, N1, N2))
+        for off in range(0, D, chunk):
+            s = summ.update(s, A[off:off + chunk], B[off:off + chunk], off)
+        return summ.advance(s, 3)     # identity without a decay clock
+
+    _assert_states_bit_equal(run(plain), run(one))
+
+
+def test_decay_matches_explicit_reweighting(key):
+    """Semantics: after ``advance(dt)`` the earlier mass is worth
+    ``gamma^dt`` — the decayed accumulator equals the explicit weighted sum
+    of per-chunk contributions."""
+    A, B = _make_pair(13)
+    gamma, dt = 0.5, 3
+    summ = StreamingSummarizer(8, probes=2, decay=gamma)
+    van = StreamingSummarizer(8, probes=2)
+    s = summ.update(summ.init(key, (D, N1, N2)), A[:96], B[:96], 0)
+    s = summ.advance(s, dt)
+    s = summ.update(s, A[96:], B[96:], 96)
+    c1 = van.update(van.init(key, (D, N1, N2)), A[:96], B[:96], 0)
+    c2 = van.update(van.init(key, (D, N1, N2)), A[96:], B[96:], 96)
+    w = gamma ** dt
+    np.testing.assert_allclose(
+        np.asarray(s.A_acc), np.asarray(w * c1.A_acc + c2.A_acc), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.probe_acc),
+        np.asarray(w * c1.probe_acc + c2.probe_acc), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(s.na2), np.asarray(w * c1.na2 + c2.na2), rtol=1e-5)
+
+
+def test_distributed_update_decay_commutes_with_psum(key):
+    """The sharded slab update on a decayed state equals the single-device
+    decayed update to float-reassociation tolerance — decay (a scalar on
+    linear accumulators) commutes with the psum."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import distributed_streaming_update
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    A, B = _make_pair(17)
+    summ = StreamingSummarizer(8, probes=2, decay=0.5)
+    st0 = summ.update(summ.init(key, (D, N1, N2)), A[:96], B[:96], 0)
+    st0 = summ.advance(st0, 2)
+    got = distributed_streaming_update(mesh, "x", summ, st0,
+                                       A[96:], B[96:], row_offset=96)
+    want = summ.update(st0, A[96:], B[96:], 96)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# The sliding window (property tests)
+# ---------------------------------------------------------------------------
+
+def _rebuild_window(key, shapes, epoch_log, head, n_buckets, probes):
+    """Independently rebuild each live bucket from the per-epoch chunk log
+    and merge ascending — the windowed-slide vs rebuilt-from-buckets
+    oracle."""
+    inner = StreamingSummarizer(8, probes=probes)
+    omega = probe_omega(key, shapes[2], probes) if probes else None
+    states = []
+    for e in range(head - n_buckets + 1, head + 1):
+        b = inner.init(window_bucket_key(key, e), shapes)
+        if omega is not None:
+            b = b._replace(omega=omega)
+        for A_c, B_c, off in epoch_log.get(e, []):
+            b = inner.update(b, A_c, B_c, off)
+        states.append(b)
+    return tree_merge(states)
+
+
+@settings(deadline=None, max_examples=8)
+@given(chunk=st.sampled_from([32, 64, 96]), slides=st.integers(1, 4),
+       probes=st.sampled_from([0, 2]))
+def test_windowed_slide_matches_rebuilt_from_buckets(chunk, slides, probes):
+    """Driving the ring through interleaved updates and O(1) slides equals
+    rebuilding every live bucket from scratch and merging ascending —
+    BIT-FOR-BIT (same bucket keys, same update ops, same merge tree)."""
+    key = jax.random.PRNGKey(19)
+    win = WindowedSummarizer(8, 3, probes=probes)
+    w = win.init(key, (D, N1, N2))
+    epoch_log = {}
+    rnd = np.random.default_rng(chunk * 100 + slides)
+    for s in range(slides + 1):
+        A, B = _make_pair(seed=1000 + s)
+        off = 0
+        while off < D:
+            w = win.update(w, A[off:off + chunk], B[off:off + chunk], off)
+            epoch_log.setdefault(int(w.head), []).append(
+                (A[off:off + chunk], B[off:off + chunk], off))
+            off += chunk
+        if s < slides:
+            n = int(rnd.integers(1, 3))
+            w = win.slide(w, n)
+    rebuilt = _rebuild_window(key, (D, N1, N2), epoch_log, int(w.head),
+                              3, probes)
+    _assert_states_bit_equal(win.merged(w), rebuilt)
+    _assert_states_bit_equal(finalize_state(win.merged(w)),
+                             win.finalize(w))
+
+
+def test_window_forgets_expired_epochs(key):
+    """Sliding past an epoch erases its rows from the summary entirely —
+    the O(1) slide is exact forgetting, not attenuation."""
+    A, B = _make_pair(23)
+    win = WindowedSummarizer(8, 2)
+    w = win.init(key, (D, N1, N2))
+    w = win.update(w, A, B, 0)
+    assert int(win.merged(w).rows_seen) == D
+    w = win.slide(w)                      # still inside the 2-epoch window
+    assert int(win.merged(w).rows_seen) == D
+    w = win.slide(w)                      # now expired
+    assert int(win.merged(w).rows_seen) == 0
+    s = win.finalize(w)
+    assert bool(jnp.all(s.A_sketch == 0)) and bool(jnp.all(s.norm_A == 0))
+
+
+def test_window_bucket_keys_decorrelate_epochs(key):
+    """Two epochs ingesting the SAME rows under the same bucket-local ids
+    produce different sketches (per-epoch reserved-fold keys) — repeating
+    row ids across epochs does not reuse projection columns."""
+    A, B = _make_pair(29)
+    win = WindowedSummarizer(8, 2)
+    w = win.init(key, (D, N1, N2))
+    w = win.update(w, A, B, 0)
+    b_first = w.buckets[int(w.head) % 2]
+    w = win.slide(w)
+    w = win.update(w, A, B, 0)
+    b_second = w.buckets[int(w.head) % 2]
+    assert not np.array_equal(np.asarray(b_first.A_acc),
+                              np.asarray(b_second.A_acc))
+    # while each bucket alone is a faithful summary under its own key
+    np.testing.assert_array_equal(np.asarray(b_first.na2),
+                                  np.asarray(b_second.na2))
+
+
+# ---------------------------------------------------------------------------
+# Drift recovery: the piecewise-stationary spectrum flip
+# ---------------------------------------------------------------------------
+
+def _top_subspace_residual(summary, U):
+    """||(I - Uhat Uhat^T) U||_2 of the estimate's top left subspace."""
+    E = summary.A_sketch.T @ summary.B_sketch
+    Uh = jnp.linalg.svd(E, full_matrices=False)[0][:, :U.shape[1]]
+    return float(jnp.linalg.norm(U - Uh @ (Uh.T @ U), 2))
+
+
+def test_drift_windowed_and_decayed_recover_vanilla_does_not(key,
+                                                             drifting_pair):
+    """After the subspace flip, the windowed and decayed summaries answer
+    with the phase-2 subspace; the cumulative summary stays pinned to the
+    (stronger) phase-1 subspace."""
+    (A1, B1, _, U1), (A2, B2, _, U2) = drifting_pair
+    d, n1, n2 = A1.shape[0], A1.shape[1], B1.shape[1]
+    k = 128
+
+    van = StreamingSummarizer(k)
+    s = van.init(key, (2 * d, n1, n2))
+    s = van.update(s, A1, B1, 0)
+    s = van.update(s, A2, B2, d)
+    r_vanilla = _top_subspace_residual(van.finalize(s), U2)
+
+    dec = StreamingSummarizer(k, decay=0.5)
+    s = dec.update(dec.init(key, (d, n1, n2)), A1, B1, 0)
+    s = dec.advance(s, 6)                 # phase-1 mass worth 2^-6
+    s = dec.update(s, A2, B2, 0)
+    r_decay = _top_subspace_residual(dec.finalize(s), U2)
+
+    win = WindowedSummarizer(k, 2)
+    w = win.init(key, (d, n1, n2))
+    w = win.update(w, A1, B1, 0)
+    w = win.slide(w)
+    w = win.update(w, A2, B2, 0)
+    w = win.slide(w)                      # phase 1 expires
+    r_window = _top_subspace_residual(win.finalize(w), U2)
+
+    assert r_vanilla > 0.9, r_vanilla     # cumulative: stuck on phase 1
+    assert r_decay < 0.5, r_decay
+    assert r_window < 0.5, r_window
+    # and the fixture's phases really are disjoint subspaces
+    assert float(jnp.linalg.norm(U1.T @ U2, 2)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trips (timestamps + ring index in the manifest)
+# ---------------------------------------------------------------------------
+
+def test_decayed_checkpoint_roundtrip_bit_exact(key, tmp_path):
+    """A decayed state with PENDING decay saves/restores bit-exactly, the
+    manifest carries the clock, and resuming then continuing is
+    bit-identical to the uninterrupted pass."""
+    A, B = _make_pair(31)
+    summ = StreamingSummarizer(8, probes=2, decay=0.9)
+    s = summ.update(summ.init(key, (D, N1, N2)), A[:96], B[:96], 0)
+    s = summ.advance(s, 2)                # leave the decay pending
+    checkpoint.save_stream_state(str(tmp_path), 1, s)
+    meta = checkpoint.read_manifest(str(tmp_path))["extra"]
+    assert meta["t_state"] == 2 and meta["t_data"] == 0
+    assert meta["decay_rate"] == pytest.approx(0.9)
+    restored = checkpoint.restore_stream_state(
+        str(tmp_path), summ.init(key, (D, N1, N2)))
+    _assert_states_bit_equal(restored, s)
+    cont = summ.update(restored, A[96:], B[96:], 96)
+    direct = summ.update(s, A[96:], B[96:], 96)
+    _assert_states_bit_equal(cont, direct)
+    _assert_states_bit_equal(finalize_state(cont), finalize_state(direct))
+
+
+def test_window_checkpoint_roundtrip_bit_exact(key, tmp_path):
+    """A slid window saves/restores bit-exactly and the manifest carries
+    head / ring index / per-bucket coverage."""
+    A, B = _make_pair(37)
+    win = WindowedSummarizer(8, 3, probes=2)
+    w = win.init(key, (D, N1, N2))
+    w = win.update(w, A[:96], B[:96], 0)
+    w = win.slide(w, 2)
+    w = win.update(w, A[96:], B[96:], 0)
+    checkpoint.save_window_state(str(tmp_path), 1, w)
+    meta = checkpoint.read_manifest(str(tmp_path))["extra"]
+    assert meta["kind"] == "window_state"
+    assert meta["head"] == 4 and meta["n_buckets"] == 3
+    assert meta["ring_index"] == 4 % 3
+    assert sorted(meta["bucket_rows_seen"]) == [0, 96, 96]
+    restored = checkpoint.restore_window_state(
+        str(tmp_path), win.init(key, (D, N1, N2)))
+    _assert_states_bit_equal(restored, w)
+    # the restored ring keeps sliding/absorbing identically
+    _assert_states_bit_equal(win.finalize(win.slide(restored)),
+                             win.finalize(win.slide(w)))
+
+
+# ---------------------------------------------------------------------------
+# Serving sessions: open_stream(decay=/window=), advance_stream, the gate
+# ---------------------------------------------------------------------------
+
+def _service(k=8, **kw):
+    from repro.serve.engine import SketchService
+    return SketchService(k=k, backend="scan", block=32, **kw)
+
+
+def test_serving_decayed_session_matches_manual(key):
+    """A decay= session is the manual summarizer lifecycle, bit-for-bit —
+    append/advance/query against update/advance/finalize."""
+    A, B = _make_pair(41)
+    svc = _service(probes=2)
+    sid = svc.open_stream(key, D, N1, N2, decay=0.5)
+    svc.append(sid, A[:96], B[:96])
+    svc.advance_stream(sid, 2)
+    svc.append(sid, A[96:], B[96:])
+    got = svc.query(sid)
+    summ = StreamingSummarizer(8, probes=2, decay=0.5)
+    s = summ.update(summ.init(key, (D, N1, N2)), A[:96], B[:96], 0)
+    s = summ.update(summ.advance(s, 2), A[96:], B[96:], 96)
+    want = finalize_state(s)
+    for name in ("A_sketch", "B_sketch", "norm_A", "norm_B"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)))
+    # close_stream hands back the decayed state for checkpointing
+    assert svc.close_stream(sid).decayed
+
+
+def test_serving_windowed_session_lifecycle(key):
+    """A window= session slides via advance_stream (cursor restarts each
+    epoch) and forgets expired epochs; stream_factors answers 'top-r NOW'
+    with the auto-rank quality gate."""
+    (A1, B1, _, _), (A2, B2, _, U2) = drifting_spectrum_pair(key)
+    d, n1, n2 = A1.shape[0], A1.shape[1], B1.shape[1]
+    svc = _service(k=128, probes=4)
+    sid = svc.open_stream(key, d, n1, n2, window=2)
+    svc.append(sid, A1, B1)
+    svc.advance_stream(sid)
+    assert svc.append(sid, A2, B2) == 2 * d      # cursor restarted at 0
+    svc.advance_stream(sid)                      # phase 1 expires
+    est = svc.stream_factors(sid, r="auto", tol=0.35, m=600, T=3,
+                             with_error=True)
+    assert est.error is not None
+    Uh = est.factors.U
+    resid = float(jnp.linalg.norm(U2 - Uh @ (Uh.T @ U2), 2))
+    assert resid < 0.6, resid
+    state = svc.close_stream(sid)
+    assert isinstance(state, WindowState)
+
+
+def test_serving_windowed_resume_roundtrip(key, tmp_path):
+    """close_stream -> save_window_state -> restore -> open_stream(state=)
+    resumes the ring bit-exactly."""
+    A, B = _make_pair(43)
+    svc = _service(probes=2)
+    sid = svc.open_stream(key, D, N1, N2, window=2)
+    svc.append(sid, A, B)
+    svc.advance_stream(sid)
+    w = svc.close_stream(sid)
+    checkpoint.save_window_state(str(tmp_path), 0, w)
+    win = WindowedSummarizer(8, 2, probes=2)
+    restored = checkpoint.restore_window_state(
+        str(tmp_path), win.init(key, (D, N1, N2)))
+    sid2 = svc.open_stream(key, D, N1, N2, window=2, state=restored)
+    got = svc.query(sid2)
+    want = win.finalize(w)
+    for name in ("A_sketch", "B_sketch", "norm_A", "norm_B"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)))
+
+
+def test_serving_decayed_resume_roundtrip(key, tmp_path):
+    """Decayed sessions resume through the existing save_stream_state path
+    (pending clock included) and keep ticking."""
+    A, B = _make_pair(47)
+    svc = _service()
+    sid = svc.open_stream(key, D, N1, N2, decay=0.5)
+    svc.append(sid, A[:96], B[:96])
+    svc.advance_stream(sid, 3)
+    s = svc.close_stream(sid)
+    checkpoint.save_stream_state(str(tmp_path), 0, s)
+    summ = StreamingSummarizer(8, decay=0.5)
+    restored = checkpoint.restore_stream_state(
+        str(tmp_path), summ.init(key, (D, N1, N2)))
+    sid2 = svc.open_stream(key, D, N1, N2, decay=0.5, state=restored)
+    svc.append(sid2, A[96:], B[96:], 96)
+    got = svc.query(sid2)
+    want = finalize_state(summ.update(s, A[96:], B[96:], 96))
+    for name in ("A_sketch", "B_sketch"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)))
+
+
+# ---------------------------------------------------------------------------
+# Raise paths: every new ValueError names its offender
+# ---------------------------------------------------------------------------
+
+def test_decay_config_rejected(key):
+    for bad in (0.0, -0.5, 1.5, True, "fast"):
+        with pytest.raises(ValueError, match="retention factor"):
+            StreamingSummarizer(8, decay=bad)
+
+
+def test_decay_state_rejects_negative_dt(key):
+    summ = StreamingSummarizer(8, decay=0.5)
+    s = summ.init(key, (D, N1, N2))
+    with pytest.raises(ValueError, match="non-negative"):
+        decay_state(s, -1)
+
+
+def test_merge_rejects_mixed_decay(key):
+    plain = StreamingSummarizer(8).init(key, (D, N1, N2))
+    decayed = StreamingSummarizer(8, decay=0.5).init(key, (D, N1, N2))
+    other = StreamingSummarizer(8, decay=0.9).init(key, (D, N1, N2))
+    with pytest.raises(ValueError, match="decayed stream state with an "
+                                         "undecayed"):
+        merge_states(plain, decayed)
+    with pytest.raises(ValueError, match="different decay rates: 0.5"):
+        merge_states(decayed, other)
+
+
+def test_window_config_rejected(key):
+    for bad in (0, -1, True, 2.0, "3"):
+        with pytest.raises(ValueError, match="n_buckets"):
+            WindowedSummarizer(8, bad)
+    with pytest.raises(ValueError, match="epoch must be non-negative"):
+        window_bucket_key(key, -1)
+    win = WindowedSummarizer(8, 2)
+    w = win.init(key, (D, N1, N2))
+    for bad in (0, -2, True, 1.5):
+        with pytest.raises(ValueError, match="positive epoch count"):
+            win.slide(w, bad)
+    wrong = WindowedSummarizer(8, 3).init(key, (D, N1, N2))
+    with pytest.raises(ValueError, match="expects n_buckets=2"):
+        win.merged(wrong)
+
+
+def test_serving_session_raises(key):
+    svc = _service()
+    with pytest.raises(ValueError, match="decay= OR window=, not both"):
+        svc.open_stream(key, D, N1, N2, decay=0.5, window=2)
+    sid = svc.open_stream(key, D, N1, N2)
+    with pytest.raises(ValueError, match="no time axis"):
+        svc.advance_stream(sid)
+    # resume-policy mismatches
+    dec = StreamingSummarizer(8, decay=0.5).init(key, (D, N1, N2))
+    with pytest.raises(ValueError, match="decay policy"):
+        svc.open_stream(key, D, N1, N2, state=dec)
+    with pytest.raises(ValueError, match="decayed at rate 0.5"):
+        svc.open_stream(key, D, N1, N2, decay=0.9, state=dec)
+    w = WindowedSummarizer(8, 2).init(key, (D, N1, N2))
+    with pytest.raises(ValueError, match="window="):
+        svc.open_stream(key, D, N1, N2, state=w)
+    with pytest.raises(ValueError, match="resized"):
+        svc.open_stream(key, D, N1, N2, window=3, state=w)
+    with pytest.raises(ValueError, match="needs a WindowState"):
+        svc.open_stream(key, D, N1, N2, window=2,
+                        state=StreamingSummarizer(8).init(key, (D, N1, N2)))
+    with pytest.raises(ValueError, match="different base key"):
+        svc.open_stream(jax.random.PRNGKey(9), D, N1, N2, window=2, state=w)
+
+
+def test_checkpoint_raises(key, tmp_path):
+    summ = StreamingSummarizer(8)
+    s = summ.update(summ.init(key, (D, N1, N2)), *_make_pair(53), 0)
+    checkpoint.save_stream_state(str(tmp_path), 0, s)
+    # shape mismatch names the leaf and both shapes
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(str(tmp_path),
+                           StreamingSummarizer(16).init(key, (D, N1, N2)))
+    # structure mismatch (decayed template vs undecayed checkpoint)
+    with pytest.raises(ValueError, match="no leaf"):
+        checkpoint.restore(
+            str(tmp_path),
+            StreamingSummarizer(8, decay=0.5).init(key, (D, N1, N2)))
+    # save_window_state refuses a plain StreamState
+    with pytest.raises(ValueError, match="WindowState"):
+        checkpoint.save_window_state(str(tmp_path), 1, s)
+    # restore_window_state refuses a resized ring
+    win2 = WindowedSummarizer(8, 2)
+    checkpoint.save_window_state(str(tmp_path), 2,
+                                 win2.init(key, (D, N1, N2)))
+    with pytest.raises(ValueError, match="resized"):
+        checkpoint.restore_window_state(
+            str(tmp_path), WindowedSummarizer(8, 3).init(key, (D, N1, N2)))

@@ -108,3 +108,17 @@ def test_ci_runs_traffic_smoke_and_bench_compare():
     assert "--suite traffic --smoke" in ci
     assert "tools/bench_compare.py" in ci
     assert "--cov=repro.serve.scheduler" in ci
+    assert "--cov=repro.ckpt" in ci
+
+
+def test_drift_tracking_error_is_gated_lower_is_better():
+    # the streaming suite's drift cells report tracking_error; a rise past
+    # the threshold must annotate, a drop must stay silent
+    mod = _load()
+    assert mod.TRACKED["tracking_error"] is True
+    base = _report(**{"drift/window2": dict(tracking_error=0.4)})
+    cur = _report(**{"drift/window2": dict(tracking_error=0.6)})
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 1 and "tracking_error rose 50%" in warnings[0]
+    warnings, _ = mod.compare(cur, base, 0.2)   # improvement: silent
+    assert warnings == []

@@ -43,6 +43,7 @@ TRACKED = {
     "measured_rps": False,
     "occupancy": False,
     "achieved_gbps": False,
+    "tracking_error": True,     # drift cells in BENCH_streaming.json
 }
 
 
