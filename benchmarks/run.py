@@ -353,6 +353,12 @@ def estimation_backends(key, *, smoke: bool = False) -> dict:
     the exact-entry two-pass baseline (LELA = biased sample + exact pass +
     WAltMin) — the record the acceptance gate reads: backend='jit' must beat
     the reference Python-loop WAltMin on wall time.
+
+    Also sweeps the refined-reconstruction cells (``refinement/<method>/
+    iters<i>/r<rank>``): spectral error vs rank x iters x method from a
+    co-sketch-carrying summary of the same pair, so ``tools/bench_compare``
+    tracks refinement accuracy (``spectral_error`` is gated lower-is-better)
+    alongside wall time across commits.
     """
     if smoke:
         d, n, r, k, m, T = 1024, 64, 3, 64, 1200, 4
@@ -394,11 +400,36 @@ def estimation_backends(key, *, smoke: bool = False) -> dict:
             "baseline_spectral_error": base_err,
         })
 
+    # refinement sweep: spectral error vs rank x iters x method, from a
+    # co-sketch-carrying summary of the same pair (s = 2r exact columns)
+    s_width = 2 * r
+    summary_c = core.build_summary(key, A, B, k, backend="reference",
+                                   cosketch=s_width)
+    jax.block_until_ready(summary_c)
+    for rank in (max(2, r // 2), r):
+        for ref_method, iters in (("tropp", 0), ("power", 1), ("power", 2)):
+            spec = core.RefineSpec(iters=iters, method=ref_method)
+
+            def run_refined(rank=rank, spec=spec):
+                out = core.estimate_product(
+                    key, summary_c, rank, method="power", backend="jit",
+                    refine=spec)
+                return out.factors
+
+            factors, us = _timed(run_refined, reps=1)
+            results.append({
+                "name": f"refinement/{ref_method}/iters{iters}/r{rank}",
+                "us_per_call": us,
+                "spectral_error": _err(A, B, factors),
+                "baseline_spectral_error": base_err,
+            })
+
     times = {rec["name"]: rec["us_per_call"] for rec in results}
     return {
         "suite": "estimation_backends",
         "meta": _meta(smoke),
         "config": {"d": d, "n": n, "r": r, "k": k, "m": m, "T": T,
+                   "cosketch": s_width,
                    "smoke": smoke, "backend_platform": jax.default_backend()},
         "baseline": baseline,
         "results": results,

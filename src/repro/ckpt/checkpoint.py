@@ -141,6 +141,8 @@ def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
         "srht": state.signs is not None,
         "probes": (0 if state.probe_acc is None
                    else int(state.probe_acc.shape[-1])),
+        "cosketch": (0 if state.cosketch_Y is None
+                     else int(state.cosketch_Y.shape[-1])),
     }
     if state.decay_rate is not None:
         # the decay timestamps ride the manifest so an operator can see the

@@ -14,6 +14,8 @@ Public API:
     distributed_sketch_summary / distributed_smppca       (multi-device pass)
     StreamingSummarizer / merge_states / finalize_state   (chunked ingestion)
     decay_state / WindowedSummarizer / window_bucket_key  (drifting streams)
+    RefineSpec / refine_factors / refined_svd             (sketch-power refinement)
+    cosketch_omega / cosketch_psi / attach_cosketch       (Tropp co-sketch block)
 """
 from repro.core.types import (
     ErrorEstimate, EstimateResult, LowRankFactors, SampleSet, SketchSummary,
@@ -51,3 +53,7 @@ from repro.core.streaming import (
     StreamingSummarizer, StreamState, WindowedSummarizer, WindowState,
     decay_state, finalize_state, merge_states, tree_merge,
     window_bucket_key)
+from repro.core.refinement import (
+    RefineSpec, attach_cosketch, cosketch_contribution, cosketch_key,
+    cosketch_omega, cosketch_pass, cosketch_psi, cosketch_width,
+    merge_cosketch, refine_factors, refined_svd, validate_refine)

@@ -109,6 +109,7 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
     k = summarizer.k
 
     omega = state.omega
+    c_omega, c_psi = state.cosketch_omega, state.cosketch_psi
 
     def _local_delta(A_loc, B_loc):
         idx = jax.lax.axis_index(axis)
@@ -126,17 +127,31 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
             dprobe = probe_contribution(omega, A_loc, B_loc,
                                         summarizer.precision)
             out = out + (jax.lax.psum(dprobe, axis),)
+        if c_omega is not None:
+            # ... and so is the refinement co-sketch pair
+            from repro.core.refinement import cosketch_contribution
+            dY, dW = cosketch_contribution(c_omega, c_psi, A_loc, B_loc,
+                                           summarizer.precision)
+            out = out + (jax.lax.psum(dY, axis), jax.lax.psum(dW, axis))
         return out
 
     out_specs = (P(None, None), P(None, None), P(None), P(None))
     if omega is not None:
         out_specs = out_specs + (P(None, None),)
+    if c_omega is not None:
+        out_specs = out_specs + (P(None, None), P(None, None))
     fn = shard_map(_local_delta, mesh=mesh,
                    in_specs=(P(axis, None), P(axis, None)),
                    out_specs=out_specs)
     parts = fn(A_slab, B_slab)
     dA, dB, dna2, dnb2 = parts[:4]
-    dprobe = parts[4] if omega is not None else None
+    nxt = 4
+    dprobe = None
+    if omega is not None:
+        dprobe, nxt = parts[nxt], nxt + 1
+    dY = dW = None
+    if c_omega is not None:
+        dY, dW = parts[nxt], parts[nxt + 1]
     # A decayed delta arrives "now": its data timestamp is the state's
     # logical clock, so the merge alignment settles the state's pending
     # decay (gamma^(t_state - t_data), the same scalar multiply the
@@ -148,7 +163,9 @@ def distributed_streaming_update(mesh: Mesh, axis: str, summarizer,
                         d_total=state.d_total, signs=signs, srows=srows,
                         omega=omega, probe_acc=dprobe,
                         decay_rate=state.decay_rate,
-                        t_state=state.t_state, t_data=state.t_state)
+                        t_state=state.t_state, t_data=state.t_state,
+                        cosketch_omega=c_omega, cosketch_psi=c_psi,
+                        cosketch_Y=dY, cosketch_W=dW)
     return merge_states(state, delta)
 
 
@@ -157,13 +174,14 @@ def distributed_streaming_summary(mesh: Mesh, axis: str, key: jax.Array,
                                   method: str = "gaussian",
                                   precision: str | None = None,
                                   slab: int | None = None,
-                                  probes: int = 0):
+                                  probes: int = 0, cosketch: int = 0):
     """Full streaming pass over row-sharded (A, B): slab-chunked ingestion +
     per-slab tree-merge. With ``slab=None`` the whole pair is one slab —
     semantically ``distributed_sketch_summary`` re-expressed through the
     streaming monoid (parity-tested in tests/core/test_streaming.py).
-    ``probes`` retains the held-out probe block (its per-shard contributions
-    merge through the same psum as the sketches)."""
+    ``probes`` retains the held-out probe block, ``cosketch`` the refinement
+    co-sketch pair (their per-shard contributions merge through the same
+    psum as the sketches)."""
     from repro.core.streaming import StreamingSummarizer
     d = A.shape[0]
     n_shards = mesh.shape[axis]
@@ -171,7 +189,7 @@ def distributed_streaming_summary(mesh: Mesh, axis: str, key: jax.Array,
         raise ValueError(f"row dim ({d}) must be a multiple of the mesh "
                          f"axis size ({n_shards})")
     summ = StreamingSummarizer(k, method=method, precision=precision,
-                               probes=probes)
+                               probes=probes, cosketch=cosketch)
     state = summ.init(key, (d, A.shape[1], B.shape[1]))
     slab = d if slab is None else slab
     # round the slab to a shard multiple so every slab — including the

@@ -202,7 +202,8 @@ def estimate_error(summary: SketchSummary, factors: LowRankFactors, *,
                          frob / jnp.maximum(m_frob, _EPS))
 
 
-def rank_curve(summary: SketchSummary, r_max: int) -> jax.Array:
+def rank_curve(summary: SketchSummary, r_max: int,
+               refine=None) -> jax.Array:
     """Estimated relative-error curve for every rank 1..r_max (fusable stage).
 
     ``curve[i]`` is the estimated relative Frobenius error of the rank-(i+1)
@@ -211,9 +212,15 @@ def rank_curve(summary: SketchSummary, r_max: int) -> jax.Array:
     ``adaptive_rank`` sweep, exposed as a pure traceable stage). This is what
     the PipelineEngine's quality-gated serving path reads once per bucket
     instead of re-running an estimation dispatch per candidate rank.
+
+    ``refine`` (a ``repro.core.refinement.RefineSpec``) swaps the curve's
+    factorization source from the rescaled sketch product to the
+    sketch-power/Tropp refined reconstruction (needs a co-sketch-carrying
+    summary) — the probe-measurement math is unchanged because the refined
+    left basis is orthonormal too.
     """
     _require_probes(summary)
-    rel, _, _, _ = _rank_curve(summary, r_max)
+    rel, _, _, _ = _rank_curve(summary, r_max, refine=refine)
     return rel
 
 
@@ -232,27 +239,38 @@ class AdaptiveRankResult(NamedTuple):
     curve: jax.Array          # (r_max,) estimated relative Frobenius errors
 
 
-@functools.partial(jax.jit, static_argnames=("r_max",))
-def _rank_curve(summary: SketchSummary, r_max: int):
+@functools.partial(jax.jit, static_argnames=("r_max", "refine"))
+def _rank_curve(summary: SketchSummary, r_max: int, refine=None):
     """One factorization, one probe projection, every candidate rank.
 
-    SVDs the rescaled sketch product ``M~ = D_A (A~^T B~) D_B`` once, then
-    evaluates the estimated squared residual of its rank-r truncation
-    against the probe block for ALL r in 1..r_max via cumulative sums:
-    with ``c = U^T probes`` and ``Z = diag(s) V^T Omega``,
+    SVDs the rescaled sketch product ``M~ = D_A (A~^T B~) D_B`` once —
+    or, with ``refine``, the sketch-power/Tropp refined reconstruction
+    (``refinement.refined_svd``; its left basis is orthonormal, which is
+    all the identity below needs) — then evaluates the estimated squared
+    residual of its rank-r truncation against the probe block for ALL r in
+    1..r_max via cumulative sums: with ``c = U^T probes`` and
+    ``Z = diag(s) V^T Omega``,
 
         errsq(r)_j = ||probes_j||^2 + sum_{i<r} (Z_ij^2 - 2 c_ij Z_ij).
 
     Returns (rel_curve (r_max,), U, s, Vt) — O(q^2 max(n1,n2) + q p) total,
-    independent of how many ranks the search probes.
+    independent of how many ranks the search probes. The whole curve is
+    forced to float32 (matrix, probes, and test columns are cast before the
+    reductions): a reduced-precision summary must not leak its dtype into
+    the gate — on float32 inputs every cast is a bitwise no-op.
     """
-    probes, omega = summary.probes, summary.probe_omega
-    M = estimator.rescaled_matrix(summary)
-    U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
-    U, s, Vt = U[:, :r_max], s[:r_max], Vt[:r_max]
+    probes = summary.probes.astype(jnp.float32)
+    omega = summary.probe_omega.astype(jnp.float32)
+    if refine is not None:
+        from repro.core.refinement import refined_svd
+        U, s, Vt = refined_svd(summary, refine, r_max)
+    else:
+        M = estimator.rescaled_matrix(summary).astype(jnp.float32)
+        U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
+        U, s, Vt = U[:, :r_max], s[:r_max], Vt[:r_max]
     c = U.T @ probes                                   # (r_max, p)
     Z = s[:, None] * (Vt @ omega)                      # (r_max, p)
-    base = jnp.sum(probes.astype(jnp.float32) ** 2, axis=0)       # (p,)
+    base = jnp.sum(probes ** 2, axis=0)                # (p,)
     deltas = Z ** 2 - 2.0 * c * Z                      # (r_max, p)
     errsq = jnp.maximum(base[None, :] + jnp.cumsum(deltas, axis=0), 0.0)
     m_frob = jnp.sqrt(jnp.mean(base))
@@ -261,7 +279,8 @@ def _rank_curve(summary: SketchSummary, r_max: int):
 
 
 def adaptive_rank(summary: SketchSummary, tol: float,
-                  r_max: Optional[int] = None) -> AdaptiveRankResult:
+                  r_max: Optional[int] = None,
+                  refine=None) -> AdaptiveRankResult:
     """Smallest rank whose *estimated* relative Frobenius error meets ``tol``.
 
     ``tol`` is relative: the gate is ``frob_est <= tol * ||A^T B||_F`` with
@@ -274,6 +293,13 @@ def adaptive_rank(summary: SketchSummary, tol: float,
     ``tol``, the result is ``r_max`` (callers inspect ``error.rel_est`` to
     see the gate missed). Host-level: returns a Python int rank and its
     truncated factors.
+
+    ``refine`` (a ``repro.core.refinement.RefineSpec``) gates on the
+    sketch-power/Tropp refined reconstruction instead of the raw rescaled
+    sketch product (needs a co-sketch-carrying summary) — its curve sits
+    below the unrefined one, so the gate passes at lower rank for the same
+    ``tol``; candidate ranks are additionally capped by the co-sketch
+    width s.
 
     >>> import jax, jax.numpy as jnp
     >>> from repro.core.summary_engine import build_summary
@@ -294,13 +320,17 @@ def adaptive_rank(summary: SketchSummary, tol: float,
     """
     _require_probes(summary)
     q = min(summary.n1, summary.n2)
+    if refine is not None:
+        from repro.core.refinement import require_cosketch
+        require_cosketch(summary)
+        q = min(q, summary.n_cosketch)
     r_max = q if r_max is None else min(r_max, q)
     if r_max < 1:
         raise ValueError(f"r_max must be >= 1, got {r_max}")
-    rel, U, s, Vt = _rank_curve(summary, r_max)
+    rel, U, s, Vt = _rank_curve(summary, r_max, refine=refine)
     curve = np.asarray(jax.device_get(rel))
     meets = np.flatnonzero(curve <= tol)
-    r = int(meets[0]) + 1 if meets.size else int(r_max)
+    r = int(meets[0]) + 1 if meets.size else int(curve.shape[0])
     factors = LowRankFactors(U[:, :r] * s[:r], Vt[:r].T)
     return AdaptiveRankResult(r, factors, estimate_error(summary, factors),
                               rel)

@@ -18,6 +18,12 @@ methods (what is estimated):
                   eta*sigma_r^* sketching cost of Thm 3.1
     direct_svd    SVD(A~^T B~): top-r SVD of the product of the sketches, no
                   sampling/completion — the one-pass strawman SMP-PCA beats
+    power         sketch-power/Tropp refinement (core/refinement.py): the
+                  stabilized (Y, W) co-sketch reconstruction, optionally
+                  preceded by sketch-power subspace iterations against the
+                  rescaled sketch product. Needs a co-sketch-carrying
+                  summary (``build_summary(..., cosketch=s)``); configured
+                  by ``refine=RefineSpec(iters, method={'power','tropp'})``
 
 backends (how it runs):
 
@@ -56,21 +62,22 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimator, sampling
+from repro.core import estimator, refinement, sampling
+from repro.core.refinement import RefineSpec
 from repro.core.types import (
     EstimateResult, LowRankFactors, SampleSet, SketchSummary)
 from repro.core.waltmin import waltmin, waltmin_reference
 
-METHODS = ("rescaled_jl", "lela_waltmin", "direct_svd")
+METHODS = ("rescaled_jl", "lela_waltmin", "direct_svd", "power")
 BACKENDS = ("reference", "jit", "pallas")
 
 _REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
 
 def register_estimator(method: str, backend: str):
-    """Register ``fn(key, summary, r, *, m, T, use_splits, exact_pair)`` for
-    one (method, backend) cell. Registering an existing cell overrides it —
-    the hook for experiment-specific estimators."""
+    """Register ``fn(key, summary, r, *, m, T, use_splits, exact_pair,
+    refine)`` for one (method, backend) cell. Registering an existing cell
+    overrides it — the hook for experiment-specific estimators."""
     def _deco(fn):
         _REGISTRY[(method, backend)] = fn
         return fn
@@ -140,8 +147,8 @@ def implicit_topr(matvec, rmatvec, n1: int, n2: int, r: int, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _rescaled_jl(key, summary, r, *, m, T, use_splits, exact_pair,
-                 values_fn, waltmin_fn) -> EstimateResult:
-    del exact_pair
+                 refine=None, values_fn, waltmin_fn) -> EstimateResult:
+    del exact_pair, refine
     k_sample, k_als = jax.random.split(key)
     samples = _sample_omega(k_sample, summary, m)
     values = values_fn(summary, samples.rows, samples.cols)
@@ -158,7 +165,8 @@ def _rescaled_jl_reference(key, summary, r, **kw) -> EstimateResult:
 
 
 @register_estimator("rescaled_jl", "jit")
-@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+@functools.partial(jax.jit,
+                   static_argnames=("r", "m", "T", "use_splits", "refine"))
 def _rescaled_jl_jit(key, summary, r, **kw) -> EstimateResult:
     return _rescaled_jl(key, summary, r,
                         values_fn=estimator.rescaled_entries,
@@ -187,7 +195,8 @@ def _rescaled_jl_pallas(key, summary, r, **kw) -> EstimateResult:
 # ---------------------------------------------------------------------------
 
 def _lela_waltmin(key, summary, r, *, m, T, use_splits, exact_pair,
-                  waltmin_fn) -> EstimateResult:
+                  refine=None, waltmin_fn) -> EstimateResult:
+    del refine
     if exact_pair is None:
         raise ValueError(
             "method='lela_waltmin' is the two-pass baseline: it needs the "
@@ -209,7 +218,8 @@ def _lela_reference(key, summary, r, **kw) -> EstimateResult:
 
 @register_estimator("lela_waltmin", "jit")
 @register_estimator("lela_waltmin", "pallas")   # no kernel stage: alias jit
-@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+@functools.partial(jax.jit,
+                   static_argnames=("r", "m", "T", "use_splits", "refine"))
 def _lela_jit(key, summary, r, **kw) -> EstimateResult:
     return _lela_waltmin(key, summary, r, waltmin_fn=waltmin, **kw)
 
@@ -220,8 +230,8 @@ def _lela_jit(key, summary, r, **kw) -> EstimateResult:
 
 @register_estimator("direct_svd", "reference")
 def _direct_svd_reference(key, summary, r, *, m, T, use_splits,
-                          exact_pair) -> EstimateResult:
-    del key, m, T, use_splits, exact_pair
+                          exact_pair, refine=None) -> EstimateResult:
+    del key, m, T, use_splits, exact_pair, refine
     M = summary.A_sketch.T @ summary.B_sketch
     U, s, Vt = jnp.linalg.svd(M, full_matrices=False)
     return EstimateResult(
@@ -230,15 +240,41 @@ def _direct_svd_reference(key, summary, r, *, m, T, use_splits,
 
 @register_estimator("direct_svd", "jit")
 @register_estimator("direct_svd", "pallas")     # no kernel stage: alias jit
-@functools.partial(jax.jit, static_argnames=("r", "m", "T", "use_splits"))
+@functools.partial(jax.jit,
+                   static_argnames=("r", "m", "T", "use_splits", "refine"))
 def _direct_svd_jit(key, summary, r, *, m, T, use_splits,
-                    exact_pair) -> EstimateResult:
-    del m, T, use_splits, exact_pair
+                    exact_pair, refine=None) -> EstimateResult:
+    del m, T, use_splits, exact_pair, refine
     As, Bs = summary.A_sketch, summary.B_sketch
     factors = implicit_topr(
         lambda X: As.T @ (Bs @ X),
         lambda X: Bs.T @ (As @ X),
         summary.n1, summary.n2, r, key)
+    return EstimateResult(factors, None, None)
+
+
+# ---------------------------------------------------------------------------
+# power — sketch-power/Tropp refinement from the retained co-sketch block
+# ---------------------------------------------------------------------------
+
+@register_estimator("power", "reference")
+def _power_reference(key, summary, r, *, m, T, use_splits, exact_pair,
+                     refine=None) -> EstimateResult:
+    """Deterministic given the summary (like direct_svd/reference, the key
+    is unused — the randomness already lives in the retained co-sketch)."""
+    del key, m, T, use_splits, exact_pair
+    factors = refinement.refine_factors(summary, r, refine or RefineSpec())
+    return EstimateResult(factors, None, None)
+
+
+@register_estimator("power", "jit")
+@register_estimator("power", "pallas")          # no kernel stage: alias jit
+@functools.partial(jax.jit,
+                   static_argnames=("r", "m", "T", "use_splits", "refine"))
+def _power_jit(key, summary, r, *, m, T, use_splits, exact_pair,
+               refine=None) -> EstimateResult:
+    del key, m, T, use_splits, exact_pair
+    factors = refinement.refine_factors(summary, r, refine or RefineSpec())
     return EstimateResult(factors, None, None)
 
 
@@ -260,6 +296,7 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
                      m: Optional[int] = None, T: int = 10,
                      use_splits: bool = False,
                      exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     refine: Optional[RefineSpec] = None,
                      with_error: bool = False) -> EstimateResult:
     """Rank-r factors of A^T B from a one-pass summary (Alg 1 steps 2-3).
 
@@ -270,13 +307,20 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
              stack of L keys).
     method:  'rescaled_jl' (the paper) | 'lela_waltmin' (two-pass baseline;
              needs ``exact_pair=(A, B)``) | 'direct_svd' (SVD of the sketch
-             product, no completion).
+             product, no completion) | 'power' (sketch-power/Tropp
+             refinement from the retained co-sketch block; needs
+             ``build_summary(..., cosketch=s)`` and takes ``refine=``).
     backend: 'reference' (eager oracle) | 'jit' (lax.scan WAltMin / implicit
              power iteration) | 'pallas' (jit + the sampled-dot gather
              kernel for rescaled-JL extraction).
     m:       Omega sample budget; defaults to the paper's ~10 n r log n.
              Ignored by direct_svd.
     T:       WAltMin iteration pairs. use_splits: Alg-2 sample splitting.
+    refine:  ``RefineSpec(iters, method={'power','tropp'})`` for
+             method='power' — 'tropp' is the stabilized (Y, W)
+             reconstruction alone, 'power' prepends ``iters`` sketch-power
+             subspace iterations. Hashable and static: a fixed refine never
+             re-traces the jitted cells.
     with_error: attach the ErrorEngine's a-posteriori quality estimate
              (``EstimateResult.error``) — works on every method x backend
              cell, but needs a probe-carrying summary
@@ -301,6 +345,17 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown estimation backend {backend!r} (use one of {BACKENDS})")
+    if refine is not None and method != "power":
+        raise ValueError(
+            f"refine= only applies to method='power', got method={method!r}")
+    if method == "power":
+        refine = RefineSpec() if refine is None else refine
+        refinement.validate_refine(refine)
+        refinement.require_cosketch(summary)
+    if method in ("rescaled_jl", "lela_waltmin"):
+        # the Eq. (1) sampler is undefined on a zero factor — fail eagerly
+        # here (the jitted cells trace through the norms and cannot)
+        sampling.require_nonzero_norms(summary.norm_A, summary.norm_B)
     fn = _REGISTRY[(method, backend)]
     batched = summary.A_sketch.ndim == 3
     if with_error and summary.probes is None:
@@ -310,7 +365,8 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
     if m is None:
         m = default_m(int(summary.A_sketch.shape[-1]),
                       int(summary.B_sketch.shape[-1]), r)
-    kw = dict(m=m, T=T, use_splits=use_splits, exact_pair=exact_pair)
+    kw = dict(m=m, T=T, use_splits=use_splits, exact_pair=exact_pair,
+              refine=refine)
 
     if not batched:
         return _maybe_error(fn(key, summary, r, **kw), summary, with_error)
@@ -330,7 +386,7 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
         A, B = exact_pair
         out = jax.vmap(
             lambda kk, s, a, b: fn(kk, s, r, m=m, T=T, use_splits=use_splits,
-                                   exact_pair=(a, b))
+                                   exact_pair=(a, b), refine=refine)
         )(keys, summary, A, B)
     else:
         out = jax.vmap(lambda kk, s: fn(kk, s, r, **kw))(keys, summary)
@@ -339,18 +395,21 @@ def estimate_product(key: jax.Array, summary: SketchSummary, r: int, *,
 
 def estimation_stage(spec, key: jax.Array, summary: SketchSummary, r: int, *,
                      exact_pair: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     refine: Optional[RefineSpec] = None,
                      with_error: bool = False) -> EstimateResult:
     """Steps 2-3 as a fusable stage driven by a declarative spec.
 
     ``spec`` is any object with the ``EstimationSpec`` fields (method,
     backend, m, T, use_splits) — ``core.pipeline`` owns the concrete type.
-    Pure and traceable: the PipelineEngine composes it with the summary and
-    error stages inside ONE jitted executable.
+    ``refine`` rides the plan (``PipelinePlan.refine``), not the spec, so
+    one spec hash serves every refinement. Pure and traceable: the
+    PipelineEngine composes it with the summary and error stages inside ONE
+    jitted executable.
     """
     return estimate_product(key, summary, r, method=spec.method,
                             backend=spec.backend, m=spec.m, T=spec.T,
                             use_splits=spec.use_splits, exact_pair=exact_pair,
-                            with_error=with_error)
+                            refine=refine, with_error=with_error)
 
 
 def _maybe_error(result: EstimateResult, summary: SketchSummary,

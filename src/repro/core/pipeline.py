@@ -65,6 +65,7 @@ import jax
 import numpy as np
 
 from repro.core import error_engine, estimation_engine, summary_engine
+from repro.core.refinement import RefineSpec, validate_refine
 from repro.core.types import EstimateResult, SketchSummary
 from repro.kernels.tuning import TuningSpec
 
@@ -92,6 +93,7 @@ class SketchSpec(NamedTuple):
     block: int = 1024
     precision: Optional[str] = None
     probes: int = 0
+    cosketch: int = 0              # refinement co-sketch width s (0 = off)
 
 
 class EstimationSpec(NamedTuple):
@@ -152,6 +154,14 @@ class PipelinePlan(NamedTuple):
     spec is part of this NamedTuple it is part of every executable cache
     key: two plans differing only in tuning compile separately, and warm
     repeat-shape traffic under either never re-traces.
+
+    ``refine`` pins the reconstruction refinement for ``method='power'``
+    estimation (a hashable ``RefineSpec``) and requires a co-sketch-carrying
+    sketch stage (``SketchSpec(cosketch=s)``). Like ``tuning`` it rides the
+    NamedTuple, so it joins every executable cache key: warm serving under a
+    pinned refinement never re-traces, and plans differing only in iters or
+    method compile separately. ``None`` — the default, and the hash every
+    pre-refinement plan has — leaves the pipeline bit-identical to before.
     """
 
     sketch: SketchSpec = SketchSpec()
@@ -160,6 +170,7 @@ class PipelinePlan(NamedTuple):
     key_layout: str = "service"
     with_error: bool = False
     tuning: Optional[TuningSpec] = None
+    refine: Optional[RefineSpec] = None
 
 
 class PipelineResult(NamedTuple):
@@ -294,6 +305,16 @@ def validate_plan(plan: PipelinePlan) -> None:
                          f"got {rank.r!r}")
     if plan.with_error and plan.sketch.probes <= 0:
         raise ValueError("with_error=True needs SketchSpec(probes=p)")
+    if est.method == "power" and sk.cosketch <= 0:
+        raise ValueError(
+            "estimation method 'power' reconstructs from the refinement "
+            "co-sketch block — set SketchSpec(cosketch=s)")
+    if plan.refine is not None:
+        validate_refine(plan.refine)
+        if est.method != "power":
+            raise ValueError(
+                f"PipelinePlan.refine only applies to estimation "
+                f"method='power', got method={est.method!r}")
     if plan.tuning is not None:
         if not isinstance(plan.tuning, TuningSpec):
             raise ValueError(f"PipelinePlan.tuning must be a TuningSpec or "
@@ -362,7 +383,8 @@ class PipelineEngine:
                 else None
             est = estimation_engine.estimation_stage(
                 plan.estimation, k_est, summary, plan.rank.r,
-                exact_pair=exact, with_error=plan.with_error)
+                exact_pair=exact, refine=plan.refine,
+                with_error=plan.with_error)
             return PipelineResult(summary, est)
         return jax.jit(pipeline_fn)
 
@@ -389,7 +411,8 @@ class PipelineEngine:
             _, k_est = derive_keys(plan.key_layout, key, batched=batched)
             return estimation_engine.estimation_stage(
                 plan.estimation, k_est, summary, plan.rank.r,
-                exact_pair=exact_pair, with_error=plan.with_error)
+                exact_pair=exact_pair, refine=plan.refine,
+                with_error=plan.with_error)
         return jax.jit(estimate_fn)
 
     def _build_summary_only(self, spec: SketchSpec,
@@ -403,15 +426,20 @@ class PipelineEngine:
         """Per-rank estimated-error curve up to the plan's rank cap.
 
         Shapes are static under trace, so the cap is resolved here and baked
-        into the executable. Batched summaries get one vmapped sweep."""
+        into the executable. Batched summaries get one vmapped sweep. A
+        refined plan scores *refined* truncations (the gate then passes at
+        the rank the served factors actually achieve), capped additionally
+        by the co-sketch width — the refined basis has only s columns."""
         n1 = int(summary.A_sketch.shape[-1])
         n2 = int(summary.B_sketch.shape[-1])
         cap = min(n1, n2, plan.sketch.k)
+        if plan.refine is not None:
+            cap = min(cap, int(summary.cosketch_Y.shape[-1]))
         r_cap = cap if plan.rank.r_max is None else min(plan.rank.r_max, cap)
         if batched:
-            return jax.vmap(lambda s: error_engine.rank_curve(s, r_cap))(
-                summary)
-        return error_engine.rank_curve(summary, r_cap)
+            return jax.vmap(lambda s: error_engine.rank_curve(
+                s, r_cap, refine=plan.refine))(summary)
+        return error_engine.rank_curve(summary, r_cap, refine=plan.refine)
 
     # -- the rank gate (host side; ONE curve read per bucket) --------------
 

@@ -52,11 +52,39 @@ def _categorical_from_weights(key: jax.Array, w: jax.Array, shape) -> jax.Array:
     return jnp.clip(jnp.searchsorted(cdf, u, side="right"), 0, w.shape[0] - 1)
 
 
+def require_nonzero_norms(norm_A: jax.Array, norm_B: jax.Array) -> None:
+    """Reject an all-zero factor before sampling corrupts silently.
+
+    A zero-norm *matrix* makes Eq. (1) divide by ``||A||_F^2 = 0`` (NaN
+    ``q_hat`` propagating into the rescaled extraction) and degenerates the
+    inverse-CDF to ``total = 0`` (every draw clips to index 0), so it is a
+    caller error named here. Zero-norm *rows* are fine: the mixture's
+    uniform branch still reaches them and their ``q_hat`` stays positive
+    through the other factor's term. Host-side only — traced norms (inside
+    a jitted estimator cell) are skipped; the eager entry points
+    (``sample_entries`` / ``sample_entries_binomial`` /
+    ``estimate_product``) fire the guard where concrete values exist.
+    """
+    if isinstance(norm_A, jax.core.Tracer) or \
+            isinstance(norm_B, jax.core.Tracer):
+        return
+    # one fused device fetch for both totals (batched norms reduce too)
+    fa2, fb2 = (float(v) for v in jax.device_get(
+        jnp.stack([jnp.min(jnp.sum(jnp.asarray(norm_A, jnp.float32) ** 2,
+                                   axis=-1)),
+                   jnp.min(jnp.sum(jnp.asarray(norm_B, jnp.float32) ** 2,
+                                   axis=-1))])))
+    for name, f2 in (("A", fa2), ("B", fb2)):
+        if not f2 > 0.0:
+            raise ValueError(
+                f"all columns of {name} have zero norm (||{name}||_F = 0, "
+                f"or a NaN norm) — the Eq. (1) sampling distribution is "
+                f"undefined for a zero factor; nothing to estimate")
+
+
 @functools.partial(jax.jit, static_argnames=("m",))
-def sample_entries(key: jax.Array, norm_A: jax.Array, norm_B: jax.Array,
-                   m: int) -> SampleSet:
-    """Draw m entries from the Eq. (1) mixture (duplicates allowed, multinomial
-    model). Returns a static-shape SampleSet with all entries valid."""
+def _sample_entries(key: jax.Array, norm_A: jax.Array, norm_B: jax.Array,
+                    m: int) -> SampleSet:
     n1, n2 = norm_A.shape[0], norm_B.shape[0]
     k_branch, k_ra, k_ua, k_rb, k_ub = jax.random.split(key, 5)
 
@@ -74,11 +102,24 @@ def sample_entries(key: jax.Array, norm_A: jax.Array, norm_B: jax.Array,
     return SampleSet(rows, cols, q_hat, jnp.ones((m,), bool))
 
 
+def sample_entries(key: jax.Array, norm_A: jax.Array, norm_B: jax.Array,
+                   m: int) -> SampleSet:
+    """Draw m entries from the Eq. (1) mixture (duplicates allowed, multinomial
+    model). Returns a static-shape SampleSet with all entries valid.
+    Raises ``ValueError`` naming the factor when called eagerly on an
+    all-zero A or B (the distribution is undefined); zero-norm rows are fine
+    (the uniform mixture branch covers them)."""
+    require_nonzero_norms(norm_A, norm_B)
+    return _sample_entries(key, norm_A, norm_B, m)
+
+
 def sample_entries_binomial(key: jax.Array, norm_A: jax.Array,
                             norm_B: jax.Array, m: int,
                             max_samples: int | None = None) -> SampleSet:
     """Paper's Bernoulli-per-entry model (Alg 1 line 3). Dense O(n1*n2);
-    returns a SampleSet padded to ``max_samples`` (default 2m)."""
+    returns a SampleSet padded to ``max_samples`` (default 2m). Raises
+    ``ValueError`` naming the factor on an all-zero A or B."""
+    require_nonzero_norms(norm_A, norm_B)
     n1, n2 = norm_A.shape[0], norm_B.shape[0]
     cap = int(max_samples or 2 * m)
     q = q_probabilities(norm_A, norm_B, m)

@@ -58,7 +58,10 @@ def fwht(x: jax.Array, axis: int = 0) -> jax.Array:
     """Unnormalized fast Walsh-Hadamard transform along ``axis`` (len = 2^p)."""
     x = jnp.moveaxis(x, axis, 0)
     d = x.shape[0]
-    assert d & (d - 1) == 0, f"FWHT length must be a power of two, got {d}"
+    if d < 1 or d & (d - 1):
+        raise ValueError(
+            f"FWHT length must be a power of two, got {d} "
+            f"(axis {axis} of shape {x.shape})")
     shape_rest = x.shape[1:]
     h = 1
     while h < d:
@@ -134,10 +137,11 @@ def streamed_rows_summary(key: jax.Array, row_idx: jax.Array,
 def merge_summaries(a: SketchSummary, b: SketchSummary) -> SketchSummary:
     """Combine summaries of disjoint row shards (Spark treeAggregate combiner).
 
-    Probe blocks (when retained) merge as a plain sum — they are linear in
-    the rows like the sketches; the shared test matrix is carried from ``a``
-    (both operands must descend from the same key)."""
+    Probe and co-sketch blocks (when retained) merge as plain sums — they
+    are linear in the rows like the sketches; the shared test matrices are
+    carried from ``a`` (both operands must descend from the same key)."""
     from repro.core.error_engine import merge_probes
+    from repro.core.refinement import merge_cosketch
     return SketchSummary(
         a.A_sketch + b.A_sketch,
         a.B_sketch + b.B_sketch,
@@ -145,4 +149,8 @@ def merge_summaries(a: SketchSummary, b: SketchSummary) -> SketchSummary:
         jnp.sqrt(a.norm_B ** 2 + b.norm_B ** 2),
         probes=merge_probes(a.probes, b.probes),
         probe_omega=a.probe_omega,
+        cosketch_Y=merge_cosketch(a.cosketch_Y, b.cosketch_Y),
+        cosketch_W=merge_cosketch(a.cosketch_W, b.cosketch_W),
+        cosketch_omega=a.cosketch_omega,
+        cosketch_psi=a.cosketch_psi,
     )

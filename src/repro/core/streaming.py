@@ -11,9 +11,11 @@ algorithms for low-rank matrix approximation"):
     merge(s1, s2)                           -> StreamState   (associative +)
     finalize(state)                         -> SketchSummary (sqrt the norms)
 
-Because every accumulator field (sketches, *squared* column norms, and the
-optional held-out probe block ``(A^T B) @ Omega``) is linear in the data
-rows, ``StreamState`` is a commutative monoid under ``merge``: chunked
+Because every accumulator field (sketches, *squared* column norms, the
+optional held-out probe block ``(A^T B) @ Omega``, and the optional
+refinement co-sketch pair ``(A^T B) @ Omega_c`` / ``Psi_c @ (A^T B)``) is
+linear in the data rows, ``StreamState`` is a commutative monoid under
+``merge``: chunked
 ingestion, any merge order, and the one-shot ``build_summary`` backends all
 produce the same summary. The randomness
 contract is the SummaryEngine's: the projection column for global row ``i``
@@ -125,6 +127,10 @@ class StreamState(NamedTuple):
     t_data: Optional[jax.Array] = None     # () int32 time the accumulators
                                            #    are aged to (t_data <= t_state;
                                            #    the gap is pending decay)
+    cosketch_omega: Optional[jax.Array] = None  # (n2, s) co-sketch range test
+    cosketch_psi: Optional[jax.Array] = None    # (l, n1) co-range test
+    cosketch_Y: Optional[jax.Array] = None      # (n1, s) running (A^T B) Omega_c
+    cosketch_W: Optional[jax.Array] = None      # (l, n2) running Psi_c (A^T B)
 
     @property
     def k(self) -> int:
@@ -135,6 +141,11 @@ class StreamState(NamedTuple):
     def n_probes(self) -> int:
         """Held-out probe count p (0 when no probe block is carried)."""
         return 0 if self.probe_acc is None else self.probe_acc.shape[-1]
+
+    @property
+    def n_cosketch(self) -> int:
+        """Co-sketch width s (0 when no refinement block is carried)."""
+        return 0 if self.cosketch_Y is None else self.cosketch_Y.shape[-1]
 
     @property
     def decayed(self) -> bool:
@@ -154,6 +165,10 @@ def _check_mergeable(s1: StreamState, s2: StreamState) -> None:
     if (s1.probe_acc is None) != (s2.probe_acc is None):
         raise ValueError("cannot merge a probe-carrying stream state with a "
                          "probe-free one (init both with the same probes=)")
+    if (s1.cosketch_Y is None) != (s2.cosketch_Y is None):
+        raise ValueError(
+            "cannot merge a cosketch-carrying stream state with a "
+            "cosketch-free one (init both with the same cosketch=)")
     if (s1.decay_rate is None) != (s2.decay_rate is None):
         raise ValueError(
             "cannot merge a decayed stream state with an undecayed one "
@@ -185,15 +200,20 @@ def _check_row_bounds(state: StreamState, lo: int, hi: int) -> None:
 
 
 def _scale_blocks(state: StreamState, factor) -> StreamState:
-    """Multiply every linear accumulator block (sketches, squared norms, and
-    the probe block) by one scalar — decay settlement is exactly this."""
+    """Multiply every linear accumulator block (sketches, squared norms, the
+    probe block, and the co-sketch pair) by one scalar — decay settlement is
+    exactly this."""
     return state._replace(
         A_acc=state.A_acc * factor,
         B_acc=state.B_acc * factor,
         na2=state.na2 * factor,
         nb2=state.nb2 * factor,
         probe_acc=(None if state.probe_acc is None
-                   else state.probe_acc * factor))
+                   else state.probe_acc * factor),
+        cosketch_Y=(None if state.cosketch_Y is None
+                    else state.cosketch_Y * factor),
+        cosketch_W=(None if state.cosketch_W is None
+                    else state.cosketch_W * factor))
 
 
 def _concrete_eq(a, b) -> bool:
@@ -281,6 +301,10 @@ def merge_states(s1: StreamState, s2: StreamState) -> StreamState:
         row_high=jnp.maximum(s1.row_high, s2.row_high),
         probe_acc=(None if s1.probe_acc is None
                    else s1.probe_acc + s2.probe_acc),
+        cosketch_Y=(None if s1.cosketch_Y is None
+                    else s1.cosketch_Y + s2.cosketch_Y),
+        cosketch_W=(None if s1.cosketch_W is None
+                    else s1.cosketch_W + s2.cosketch_W),
         **extra)
 
 
@@ -309,7 +333,11 @@ def finalize_state(state: StreamState) -> SketchSummary:
     state = _settle_state(state)
     return SketchSummary(state.A_acc, state.B_acc,
                          jnp.sqrt(state.na2), jnp.sqrt(state.nb2),
-                         probes=state.probe_acc, probe_omega=state.omega)
+                         probes=state.probe_acc, probe_omega=state.omega,
+                         cosketch_Y=state.cosketch_Y,
+                         cosketch_W=state.cosketch_W,
+                         cosketch_omega=state.cosketch_omega,
+                         cosketch_psi=state.cosketch_psi)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "method", "precision"))
@@ -337,6 +365,15 @@ def _probe_chunk(omega, A_chunk, B_chunk, *, precision: Optional[str]):
     return probe_contribution(omega, A_chunk, B_chunk, precision)
 
 
+@functools.partial(jax.jit, static_argnames=("precision",))
+def _cosketch_chunk(omega, psi, A_chunk, B_chunk, *,
+                    precision: Optional[str]):
+    """(dY, dW) co-sketch delta for one chunk — the exact float ops of the
+    one-shot ``refinement.cosketch_pass`` scan body (bit-parity contract)."""
+    from repro.core.refinement import cosketch_contribution
+    return cosketch_contribution(omega, psi, A_chunk, B_chunk, precision)
+
+
 class StreamingSummarizer:
     """Chunked/mergeable front-end to the SummaryEngine's single pass.
 
@@ -362,7 +399,7 @@ class StreamingSummarizer:
 
     def __init__(self, k: int, *, method: str = "gaussian",
                  precision: Optional[str] = None, probes: int = 0,
-                 decay: float = 1.0):
+                 cosketch: int = 0, decay: float = 1.0):
         if method not in METHODS:
             raise ValueError(
                 f"unknown sketch method {method!r} (use {METHODS})")
@@ -374,6 +411,7 @@ class StreamingSummarizer:
         self.method = method
         self.precision = precision
         self.probes = probes
+        self.cosketch = cosketch
         self.decay = float(decay)
 
     # -- contract ----------------------------------------------------------
@@ -397,6 +435,15 @@ class StreamingSummarizer:
             probe_acc = jnp.zeros((n1, self.probes), jnp.float32)
         else:
             omega = probe_acc = None
+        if self.cosketch:
+            from repro.core.refinement import (
+                cosketch_omega, cosketch_psi, cosketch_width)
+            c_omega = cosketch_omega(key, n2, self.cosketch)
+            c_psi = cosketch_psi(key, n1, self.cosketch)
+            c_Y = jnp.zeros((n1, self.cosketch), jnp.float32)
+            c_W = jnp.zeros((cosketch_width(self.cosketch), n2), jnp.float32)
+        else:
+            c_omega = c_psi = c_Y = c_W = None
         if self.decay < 1.0:
             decay_rate = jnp.asarray(self.decay, jnp.float32)
             t_state = t_data = jnp.zeros((), jnp.int32)
@@ -415,7 +462,9 @@ class StreamingSummarizer:
             row_high=jnp.zeros((), jnp.int32),
             d_total=jnp.asarray(d, jnp.int32),
             signs=signs, srows=srows, omega=omega, probe_acc=probe_acc,
-            decay_rate=decay_rate, t_state=t_state, t_data=t_data)
+            decay_rate=decay_rate, t_state=t_state, t_data=t_data,
+            cosketch_omega=c_omega, cosketch_psi=c_psi,
+            cosketch_Y=c_Y, cosketch_W=c_W)
 
     def update(self, state: StreamState, A_chunk: jax.Array,
                B_chunk: jax.Array, row_offset) -> StreamState:
@@ -511,13 +560,19 @@ class StreamingSummarizer:
         if state.omega is not None:
             probe_acc = probe_acc + _probe_chunk(
                 state.omega, A_chunk, B_chunk, precision=self.precision)
+        c_Y, c_W = state.cosketch_Y, state.cosketch_W
+        if state.cosketch_omega is not None:
+            dY, dW = _cosketch_chunk(
+                state.cosketch_omega, state.cosketch_psi, A_chunk, B_chunk,
+                precision=self.precision)
+            c_Y, c_W = c_Y + dY, c_W + dW
         return state._replace(
             A_acc=state.A_acc + dA, B_acc=state.B_acc + dB,
             na2=state.na2 + dna2, nb2=state.nb2 + dnb2,
             rows_seen=state.rows_seen + jnp.int32(t),
             row_high=jnp.maximum(state.row_high,
                                  jnp.asarray(hi1, jnp.int32)),
-            probe_acc=probe_acc)
+            probe_acc=probe_acc, cosketch_Y=c_Y, cosketch_W=c_W)
 
 
 # -- sliding window over epochs ----------------------------------------------
@@ -597,7 +652,8 @@ class WindowedSummarizer:
 
     def __init__(self, k: int, n_buckets: int, *,
                  method: str = "gaussian",
-                 precision: Optional[str] = None, probes: int = 0):
+                 precision: Optional[str] = None, probes: int = 0,
+                 cosketch: int = 0):
         if isinstance(n_buckets, bool) or not isinstance(n_buckets, int) \
                 or n_buckets < 1:
             raise ValueError(
@@ -605,7 +661,8 @@ class WindowedSummarizer:
                 f"epochs), got {n_buckets!r}")
         self.n_buckets = n_buckets
         self._inner = StreamingSummarizer(
-            k, method=method, precision=precision, probes=probes)
+            k, method=method, precision=precision, probes=probes,
+            cosketch=cosketch)
 
     @property
     def k(self) -> int:
@@ -622,12 +679,23 @@ class WindowedSummarizer:
         """Held-out probe count carried by every bucket."""
         return self._inner.probes
 
-    def _fresh_bucket(self, key, shapes, epoch, omega) -> StreamState:
+    @property
+    def cosketch(self) -> int:
+        """Co-sketch width carried by every bucket."""
+        return self._inner.cosketch
+
+    def _fresh_bucket(self, key, shapes, epoch, omega,
+                      cpair=None) -> StreamState:
         bucket = self._inner.init(window_bucket_key(key, epoch), shapes)
         if omega is not None:
             # all buckets share the BASE key's probe matrix: probe blocks
             # only sum across buckets against a common omega
             bucket = bucket._replace(omega=omega)
+        if cpair is not None:
+            # same sharing for the co-sketch test pair: (Y, W) blocks only
+            # sum across buckets against a common (Omega_c, Psi_c)
+            bucket = bucket._replace(cosketch_omega=cpair[0],
+                                     cosketch_psi=cpair[1])
         return bucket
 
     def init(self, key: jax.Array,
@@ -640,7 +708,13 @@ class WindowedSummarizer:
             omega = probe_omega(key, shapes[2], self._inner.probes)
         else:
             omega = None
-        buckets = tuple(self._fresh_bucket(key, shapes, e, omega)
+        if self._inner.cosketch:
+            from repro.core.refinement import cosketch_omega, cosketch_psi
+            cpair = (cosketch_omega(key, shapes[2], self._inner.cosketch),
+                     cosketch_psi(key, shapes[1], self._inner.cosketch))
+        else:
+            cpair = None
+        buckets = tuple(self._fresh_bucket(key, shapes, e, omega, cpair)
                         for e in range(self.n_buckets))
         return WindowState(key=key, buckets=buckets,
                            head=jnp.asarray(self.n_buckets - 1, jnp.int32))
@@ -684,12 +758,14 @@ class WindowedSummarizer:
                 f"slide needs a positive epoch count, got {n!r}")
         ref = wstate.buckets[0]
         shapes = (int(ref.d_total), ref.A_acc.shape[1], ref.B_acc.shape[1])
+        cpair = (None if ref.cosketch_omega is None
+                 else (ref.cosketch_omega, ref.cosketch_psi))
         head = int(wstate.head)
         buckets = list(wstate.buckets)
         for _ in range(n):
             head += 1
             buckets[head % self.n_buckets] = self._fresh_bucket(
-                wstate.key, shapes, head, ref.omega)
+                wstate.key, shapes, head, ref.omega, cpair)
         return wstate._replace(buckets=tuple(buckets),
                                head=jnp.asarray(head, jnp.int32))
 

@@ -100,7 +100,11 @@ def srht_plan(key: jax.Array, d: int, k: int):
     over the power-of-two padded dimension) matches ``core.sketch.srht_sketch``
     and ``kernels.ops.srht_sketch_kernel`` so all backends share one plan."""
     dp = _next_pow2(d)
-    assert k <= dp, f"srht needs k <= next_pow2(d) (k={k}, dp={dp})"
+    if k > dp:
+        raise ValueError(
+            f"srht needs k <= next_pow2(d): k={k} exceeds the padded "
+            f"dimension dp={dp} (d={d}) — no-replacement row sampling "
+            f"cannot draw k rows from dp")
     key_sign, key_rows = jax.random.split(key)
     signs = jax.random.rademacher(key_sign, (d,), dtype=jnp.float32)
     rows = jax.random.choice(key_rows, dp, (k,), replace=False)
@@ -334,7 +338,7 @@ def _is_key_stack(key, L: int) -> bool:
 def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
                   method: str = "gaussian", backend: str = "reference",
                   block: int = 1024, precision: Optional[str] = None,
-                  probes: int = 0, tuning=None, mesh=None,
+                  probes: int = 0, cosketch: int = 0, tuning=None, mesh=None,
                   axis: Optional[str] = None) -> SketchSummary:
     """One-pass summary of (A, B): sketches (k, n) + exact column norms.
 
@@ -352,6 +356,11 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
              probe stage is backend-independent, so the probe block is
              bit-identical across backends for a fixed ``block``). Powers
              the ErrorEngine's ``estimate_error``/``adaptive_rank``.
+    cosketch: retain an s-column Tropp range/co-range pair
+             ``(A^T B) @ Omega_c`` / ``Psi_c @ (A^T B)`` alongside the
+             sketches (same single pass; backend-independent attach like the
+             probe block). Powers the RefinementEngine's sketch-power/Tropp
+             refinement (``estimate_product(method='power')``).
     tuning:  optional ``repro.kernels.tuning.TuningSpec`` pinning kernel
              block configs (acted on by the pallas backend; layout-only, so
              results stay within float reassociation of the default).
@@ -393,12 +402,21 @@ def build_summary(key: jax.Array, A: jax.Array, B: jax.Array, k: int, *,
             out = jax.vmap(lambda kk, a, b, s: error_engine.attach_probes(
                 s, kk, a, b, probes, block=block, precision=precision)
             )(keys, A, B, out)
+        if cosketch:
+            from repro.core import refinement
+            out = jax.vmap(lambda kk, a, b, s: refinement.attach_cosketch(
+                s, kk, a, b, cosketch, block=block, precision=precision)
+            )(keys, A, B, out)
         return out
     out = fn(key, A, B, k, **kw)
     if probes:
         from repro.core import error_engine
         out = error_engine.attach_probes(out, key, A, B, probes, block=block,
                                          precision=precision)
+    if cosketch:
+        from repro.core import refinement
+        out = refinement.attach_cosketch(out, key, A, B, cosketch,
+                                         block=block, precision=precision)
     return out
 
 
@@ -417,7 +435,8 @@ def summary_stage(spec, key: jax.Array, A: jax.Array, B: jax.Array,
     """The step-1 pass as a fusable stage driven by a declarative spec.
 
     ``spec`` is any object with the ``SketchSpec`` fields (method, backend,
-    k, block, precision, probes) — ``core.pipeline`` owns the concrete type;
+    k, block, precision, probes, cosketch) — ``core.pipeline`` owns the
+    concrete type;
     taking it duck-typed keeps this module import-free of the pipeline layer.
     Pure and traceable: the PipelineEngine composes it with the estimation
     and error stages inside ONE jitted executable. ``method='norms_only'``
@@ -430,6 +449,7 @@ def summary_stage(spec, key: jax.Array, A: jax.Array, B: jax.Array,
     return build_summary(key, A, B, spec.k, method=spec.method,
                          backend=spec.backend, block=spec.block,
                          precision=spec.precision, probes=spec.probes,
+                         cosketch=getattr(spec, "cosketch", 0),
                          tuning=tuning)
 
 

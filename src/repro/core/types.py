@@ -23,6 +23,16 @@ class SketchSummary(NamedTuple):
     single pass, ``probe_omega`` the (n2, p) Gaussian test matrix derived
     from the sketch key. Both are None when the summary was built without
     probes (``build_summary(..., probes=0)``, the default).
+
+    ``cosketch_*`` is the optional Tropp range/co-range pair retained for
+    sketch-power/Tropp refinement (RefinementEngine): ``cosketch_Y =
+    (A^T B) @ cosketch_omega`` (n1, s) and ``cosketch_W = cosketch_psi @
+    (A^T B)`` (l, n2) with ``l = 2s + 1`` (Tropp's co-range oversampling),
+    accumulated in the same single pass, with the
+    (n2, s)/(l, n1) Gaussian test matrices derived from the sketch key
+    under the reserved "csk!" fold. All four stay None by default
+    (``build_summary(..., cosketch=0)``) so legacy treedefs, checkpoints,
+    and the streaming monoid are unchanged when refinement is off.
     """
 
     A_sketch: jax.Array        # (k, n1) = Pi @ A
@@ -31,6 +41,10 @@ class SketchSummary(NamedTuple):
     norm_B: jax.Array          # (n2,)  exact column L2 norms of B
     probes: Optional[jax.Array] = None       # (n1, p) = A^T (B @ probe_omega)
     probe_omega: Optional[jax.Array] = None  # (n2, p) held-out Gaussian probes
+    cosketch_Y: Optional[jax.Array] = None      # (n1, s) range co-sketch
+    cosketch_W: Optional[jax.Array] = None      # (l, n2) co-range co-sketch
+    cosketch_omega: Optional[jax.Array] = None  # (n2, s) range test matrix
+    cosketch_psi: Optional[jax.Array] = None    # (l, n1) co-range test matrix
 
     @property
     def k(self) -> int:
@@ -61,6 +75,11 @@ class SketchSummary(NamedTuple):
     def n_probes(self) -> int:
         """Held-out probe count p (0 when no probe block was retained)."""
         return 0 if self.probes is None else self.probes.shape[-1]
+
+    @property
+    def n_cosketch(self) -> int:
+        """Co-sketch width s (0 when no refinement block was retained)."""
+        return 0 if self.cosketch_Y is None else self.cosketch_Y.shape[-1]
 
 
 class SampleSet(NamedTuple):

@@ -31,7 +31,9 @@ from jax.experimental import pallas as pl
 
 def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
     """Sylvester Hadamard matrix H_n (n a power of two), unnormalized."""
-    assert n & (n - 1) == 0, n
+    if n < 1 or n & (n - 1):
+        raise ValueError(
+            f"Hadamard matrix size must be a power of two, got n={n}")
     H = np.array([[1.0]], dtype=np.float32)
     while H.shape[0] < n:
         H = np.block([[H, H], [H, -H]])

@@ -146,7 +146,7 @@ class SketchService:
     def __init__(self, k: int = 128, *, method: str = "gaussian",
                  backend: str = "scan", block: int = 1024,
                  precision: Optional[str] = None, probes: int = 0,
-                 tuning=None,
+                 cosketch: int = 0, tuning=None,
                  engine: Optional[pipeline.PipelineEngine] = None,
                  loop: Optional[ServingLoop] = None):
         self.k = k
@@ -155,6 +155,7 @@ class SketchService:
         self.block = block
         self.precision = precision
         self.probes = probes
+        self.cosketch = cosketch      # refinement co-sketch width (0 = off)
         self.tuning = tuning          # Optional[kernels.tuning.TuningSpec]
         if loop is not None and engine is not None and \
                 loop.engine is not engine:
@@ -215,7 +216,8 @@ class SketchService:
         """The service's step-1 configuration as a declarative plan stage."""
         return pipeline.SketchSpec(
             method=self.method, backend=self.backend, k=self.k,
-            block=self.block, precision=self.precision, probes=self.probes)
+            block=self.block, precision=self.precision, probes=self.probes,
+            cosketch=self.cosketch)
 
     def flush(self) -> Dict[int, SketchSummary]:
         """One cached batched summary executable per bucket; drains the
@@ -231,7 +233,8 @@ class SketchService:
                       r_max: Optional[int] = None, m: Optional[int] = None,
                       T: int = 6, est_method: str = "rescaled_jl",
                       est_backend: str = "jit", use_splits: bool = False,
-                      with_error: bool = False) -> Dict[int, "ServedEstimate"]:
+                      with_error: bool = False,
+                      refine=None) -> Dict[int, "ServedEstimate"]:
         """The sketch->estimate pipeline: per shape bucket, ONE plan-compiled
         fused executable (batched summary + estimation + optional error in a
         single dispatch, cached across flushes), and each request gets the
@@ -257,6 +260,10 @@ class SketchService:
         reproducible per request and independent of bucket composition.
         ``est_method='lela_waltmin'`` stacks the queued (A, B) pairs as the
         exact second pass (the service holds them anyway while queueing).
+        ``est_method='power'`` with ``refine=RefineSpec(...)`` serves
+        refined reconstructions (needs ``SketchService(cosketch=s)``); the
+        spec joins the plan, so warm pinned-refinement serving never
+        re-traces.
         """
         gated = self._check_gate(r, tol, with_error)
         if not self._queue:
@@ -264,7 +271,7 @@ class SketchService:
         plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
                           m=m, T=T, est_method=est_method,
                           est_backend=est_backend, use_splits=use_splits,
-                          with_error=with_error, gated=gated)
+                          with_error=with_error, gated=gated, refine=refine)
         futures = self._enqueue(PipelineWork(plan))
         self.loop.drain()
         return {ticket: as_served(f.result())
@@ -286,7 +293,8 @@ class SketchService:
         return gated
 
     def _plan(self, *, r, tol, r_max, m, T, est_method, est_backend,
-              use_splits, with_error, gated) -> pipeline.PipelinePlan:
+              use_splits, with_error, gated,
+              refine=None) -> pipeline.PipelinePlan:
         """One flush/stream request as a declarative plan (the executable-
         cache key). Gate-only knobs are normalized away on the fixed-rank
         path so equivalent requests share cache entries."""
@@ -298,7 +306,7 @@ class SketchService:
                 method=est_method, backend=est_backend, m=m, T=T,
                 use_splits=use_splits),
             rank=rank, key_layout="service", with_error=with_error,
-            tuning=self.tuning)
+            tuning=self.tuning, refine=refine)
 
     # -- streaming accumulator sessions ------------------------------------
 
@@ -336,7 +344,8 @@ class SketchService:
                                             n_buckets=window, state=state)
         summ = StreamingSummarizer(self.k, method=self.method,
                                    precision=self.precision,
-                                   probes=self.probes, decay=decay)
+                                   probes=self.probes,
+                                   cosketch=self.cosketch, decay=decay)
         if state is None:
             state = summ.init(key, (d, n1, n2))
         elif isinstance(state, WindowState):
@@ -359,6 +368,12 @@ class SketchService:
                     f"but the service is configured with probes="
                     f"{self.probes} — probe blocks cannot be grown or "
                     f"dropped mid-pass")
+            if state.n_cosketch != self.cosketch:
+                raise ValueError(
+                    f"resumed state carries a co-sketch block of width "
+                    f"{state.n_cosketch} but the service is configured with "
+                    f"cosketch={self.cosketch} — co-sketch blocks cannot be "
+                    f"grown or dropped mid-pass")
             if state.key is not None and not jnp.array_equal(
                     jax.random.key_data(state.key)
                     if jnp.issubdtype(state.key.dtype, jax.dtypes.prng_key)
@@ -395,7 +410,8 @@ class SketchService:
     def _open_window_stream(self, key, d, n1, n2, *, n_buckets, state) -> int:
         summ = WindowedSummarizer(self.k, n_buckets, method=self.method,
                                   precision=self.precision,
-                                  probes=self.probes)
+                                  probes=self.probes,
+                                  cosketch=self.cosketch)
         if state is None:
             state = summ.init(key, (d, n1, n2))
         else:
@@ -421,6 +437,11 @@ class SketchService:
                     f"resumed window carries {ref.n_probes} probe columns "
                     f"but the service is configured with probes="
                     f"{self.probes}")
+            if ref.n_cosketch != self.cosketch:
+                raise ValueError(
+                    f"resumed window carries a co-sketch block of width "
+                    f"{ref.n_cosketch} but the service is configured with "
+                    f"cosketch={self.cosketch}")
             if not jnp.array_equal(state.key, key):
                 raise ValueError(
                     "resumed window carries a different base key than the "
@@ -500,7 +521,8 @@ class SketchService:
                        est_method: str = "rescaled_jl",
                        est_backend: str = "jit",
                        use_splits: bool = False,
-                       with_error: bool = False) -> ServedEstimate:
+                       with_error: bool = False,
+                       refine=None) -> ServedEstimate:
         """``flush_factors`` against the live accumulator: finalize the
         session's state and run the same compiled estimation path
         (``PipelineEngine.run_from_summary``) with the same per-request key
@@ -516,7 +538,7 @@ class SketchService:
         plan = self._plan(r=r if not gated else None, tol=tol, r_max=r_max,
                           m=m, T=T, est_method=est_method,
                           est_backend=est_backend, use_splits=use_splits,
-                          with_error=with_error, gated=gated)
+                          with_error=with_error, gated=gated, refine=refine)
         summary = sess.summarizer.finalize(sess.state)
         est = self.engine.run_from_summary(plan, sess.key, summary)
         return ServedEstimate(summary, est.factors, error=est.error)

@@ -192,7 +192,10 @@ def test_estimate_error_within_2x_every_cell(key, method, backend):
     within 2x of the true residual for EVERY registered method x backend
     cell (the acceptance criterion)."""
     A, B, M = known_spectrum_pair(key, 384, 14, 12, spectrum_values("slow"))
-    summary = build_summary(key, A, B, 64, probes=32)
+    # the power cell reconstructs from the retained co-sketch block, so its
+    # summaries carry one; every other cell runs on the vanilla summary
+    cosketch = 8 if method == "power" else 0
+    summary = build_summary(key, A, B, 64, probes=32, cosketch=cosketch)
     exact = (A, B) if method == "lela_waltmin" else None
     res = estimate_product(jax.random.fold_in(key, 1), summary, 3, m=1200,
                            T=4, method=method, backend=backend,
@@ -406,3 +409,28 @@ def test_quality_gated_guards(key):
 def core_service(k, probes):
     from repro.serve.engine import SketchService
     return SketchService(k=k, backend="scan", block=32, probes=probes)
+
+
+def test_rank_curve_mixed_dtype_forced_to_f32(key):
+    """Regression: a reduced-precision summary (bf16 sketches/probes) must
+    not leak its dtype into the gate — the curve is float32, and on an
+    all-float32 summary the internal casts are bitwise no-ops."""
+    A, B = gaussian_pair(key)
+    summary = core.build_summary(key, A, B, 16, probes=4)
+    f32_curve = core.rank_curve(summary, 5)
+    assert f32_curve.dtype == jnp.float32
+    # bit-parity: casting an f32 summary through the forced-f32 path is
+    # the identity
+    recast = jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.float32 else x,
+        summary)
+    np.testing.assert_array_equal(np.asarray(core.rank_curve(recast, 5)),
+                                  np.asarray(f32_curve))
+    # a bf16 summary yields a finite float32 curve close to the f32 one
+    bf16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16), summary)
+    curve = core.rank_curve(bf16, 5)
+    assert curve.dtype == jnp.float32
+    got = np.asarray(curve)
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, np.asarray(f32_curve), rtol=0.1,
+                               atol=0.05)

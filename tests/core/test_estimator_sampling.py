@@ -136,3 +136,59 @@ def test_property_sampler_static_shapes_and_ranges(n1, n2, m, seed):
     assert int(ss.cols.min()) >= 0 and int(ss.cols.max()) < n2
     q = np.asarray(ss.q_hat)
     assert np.all(q > 0) and np.all(q <= 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Zero-norm / degenerate-CDF hardening
+# ---------------------------------------------------------------------------
+
+def test_zero_matrix_raises_named_valueerror(key):
+    """An all-zero factor makes Eq. (1) a 0/0: both samplers refuse eagerly
+    with a ValueError naming WHICH factor is degenerate."""
+    import pytest
+    zeros = jnp.zeros((8,))
+    ones = jnp.ones((8,))
+    with pytest.raises(ValueError, match="columns of A"):
+        core.sample_entries(key, zeros, ones, 20)
+    with pytest.raises(ValueError, match="columns of B"):
+        core.sample_entries(key, ones, zeros, 20)
+    with pytest.raises(ValueError, match="columns of A"):
+        core.sample_entries_binomial(key, zeros, ones, 20)
+    with pytest.raises(ValueError, match="columns of B"):
+        core.sample_entries_binomial(key, ones, jnp.full((8,), jnp.nan), 20)
+
+
+def test_zero_matrix_raises_through_estimate_product(key):
+    """The guard fires end-to-end: estimate_product on a summary of an
+    all-zero A raises the named ValueError instead of returning NaN
+    factors — for both sampling-based methods."""
+    import pytest
+    from repro.core import estimation_engine
+    from repro.core.summary_engine import build_summary, norms_only_summary
+    A = jnp.zeros((64, 6))
+    B = jax.random.normal(key, (64, 5))
+    summary = build_summary(key, A, B, 8)
+    with pytest.raises(ValueError, match="columns of A"):
+        estimation_engine.estimate_product(key, summary, 2, m=50, T=2)
+    with pytest.raises(ValueError, match="columns of A"):
+        estimation_engine.estimate_product(
+            key, norms_only_summary(A, B), 2, method="lela_waltmin",
+            m=50, T=2, exact_pair=(A, B))
+
+
+def test_zero_columns_fall_through_uniform_branch(key):
+    """Zero-norm *columns* (rows of A^T B) are fine: the Eq. (1) mixture's
+    uniform term keeps every q_ij > 0, the sampler stays in range, and
+    estimate_product completes with finite factors end-to-end."""
+    from repro.core import estimation_engine
+    from repro.core.summary_engine import build_summary
+    A = jax.random.normal(key, (64, 6)).at[:, :2].set(0.0)
+    B = jax.random.normal(jax.random.fold_in(key, 1), (64, 5))
+    norm_A = jnp.linalg.norm(A, axis=0)
+    ss = core.sample_entries(key, norm_A, jnp.linalg.norm(B, axis=0), 60)
+    q = np.asarray(ss.q_hat)
+    assert np.all(q > 0) and np.all(np.isfinite(q))
+    summary = build_summary(key, A, B, 16)
+    est = estimation_engine.estimate_product(key, summary, 2, m=60, T=2)
+    assert np.all(np.isfinite(np.asarray(est.factors.U)))
+    assert np.all(np.isfinite(np.asarray(est.factors.V)))

@@ -55,6 +55,13 @@ WINDOW_KEYS = {0: [1127536114, 704093423],
                1: [1755690605, 2856154744],
                5: [1564771073, 3152420000]}
 
+# fold_in(PRNGKey(0), 0x63736B21) — the RefinementEngine's reserved co-sketch
+# tag fold ("csk!"), and the second-level test-matrix keys:
+# omega = normal(fold_in(tag fold, 0)), psi = normal(fold_in(tag fold, 1))
+COSKETCH_TAG_FOLD = [1946431690, 1695170262]
+COSKETCH_OMEGA_KEY = [1132837233, 2203595539]
+COSKETCH_PSI_KEY = [3222476339, 429157182]
+
 # fold_in(PRNGKey(0), 0x746E7421) — the reserved tenant tag fold ("tnt!"),
 # and the full two-level tenant_key derivation for a str and an int tenant:
 # fold_in(TENANT_TAG_FOLD, tenant_id) with tenant_id("acme") = crc32 masked
@@ -284,6 +291,36 @@ def test_window_bucket_key_tree(key):
                                   np.asarray(ref.probe_acc))
     np.testing.assert_array_equal(np.asarray(bucket.omega),
                                   np.asarray(probe_omega(key, 4, 3)))
+
+
+def test_cosketch_key_tree(key):
+    """The refinement co-sketch block's reserved two-level fold is frozen
+    ("csk!" then sub-index 0/1 for omega/psi), and build_summary's retained
+    test matrices are drawn from exactly those keys — so a co-sketch built
+    during serving is bit-reproducible from the caller's base key alone."""
+    from repro.core.refinement import (
+        cosketch_key, cosketch_omega, cosketch_psi, cosketch_width)
+    _eq(cosketch_key(key), COSKETCH_TAG_FOLD)
+    _eq(jax.random.fold_in(key, 0x63736B21), COSKETCH_TAG_FOLD)
+    tag = jnp.asarray(COSKETCH_TAG_FOLD, jnp.uint32)
+    _eq(jax.random.fold_in(tag, 0), COSKETCH_OMEGA_KEY)
+    _eq(jax.random.fold_in(tag, 1), COSKETCH_PSI_KEY)
+
+    A = jax.random.normal(key, (64, 6))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (64, 5))
+    s = summary_engine.build_summary(key, A, B, 8, cosketch=3)
+    want_omega = jax.random.normal(
+        jnp.asarray(COSKETCH_OMEGA_KEY, jnp.uint32), (5, 3))
+    want_psi = jax.random.normal(
+        jnp.asarray(COSKETCH_PSI_KEY, jnp.uint32), (cosketch_width(3), 6))
+    np.testing.assert_array_equal(np.asarray(s.cosketch_omega),
+                                  np.asarray(want_omega))
+    np.testing.assert_array_equal(np.asarray(s.cosketch_psi),
+                                  np.asarray(want_psi))
+    np.testing.assert_array_equal(np.asarray(cosketch_omega(key, 5, 3)),
+                                  np.asarray(s.cosketch_omega))
+    np.testing.assert_array_equal(np.asarray(cosketch_psi(key, 6, 3)),
+                                  np.asarray(s.cosketch_psi))
 
 
 def test_probe_key_tree(key):

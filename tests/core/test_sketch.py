@@ -130,3 +130,16 @@ def test_property_norm_merge_pythagorean(n, seed):
     merged = core.merge_summaries(s1, s2)
     np.testing.assert_allclose(np.asarray(merged.norm_A),
                                np.linalg.norm(np.asarray(A), axis=0), rtol=1e-4)
+
+
+def test_fwht_non_pow2_raises_named_valueerror():
+    """fwht on a non-power-of-two axis is a descriptive ValueError naming
+    the offending length and shape, never a strippable assert."""
+    import pytest
+    from repro.core.sketch import fwht
+    with pytest.raises(ValueError, match=r"power of two.*48"):
+        fwht(jnp.ones((48, 4)), axis=0)
+    with pytest.raises(ValueError, match=r"axis 1"):
+        fwht(jnp.ones((4, 12)), axis=1)
+    # power-of-two lengths still pass through untouched
+    assert fwht(jnp.ones((16, 3)), axis=0).shape == (16, 3)

@@ -214,3 +214,18 @@ def test_smppca_through_engine_backends(key):
         assert e < 0.8, (backend, errs)
     spread = max(errs.values()) - min(errs.values())
     assert spread < 0.05, errs
+
+
+def test_srht_oversized_k_raises_named_valueerror(key):
+    """srht with k > next_pow2(d) cannot sample k distinct rows: a
+    descriptive ValueError naming the shapes, never a strippable assert."""
+    import pytest
+    from repro.core.summary_engine import srht_plan
+    with pytest.raises(ValueError, match=r"k=100.*d=48"):
+        srht_plan(key, 48, 100)
+    A = jax.random.normal(key, (48, 6))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (48, 5))
+    with pytest.raises(ValueError, match="next_pow2"):
+        core.build_summary(key, A, B, 100, method="srht")
+    # k exactly at the padded dimension is still legal
+    assert srht_plan(key, 48, 64)[1].shape == (64,)

@@ -185,3 +185,13 @@ def test_property_fwht_parseval(logd, seed):
     out = ops.blocked_fwht(X, jnp.ones((d,)), b=min(128, d)) / np.sqrt(d)
     np.testing.assert_allclose(float(jnp.linalg.norm(out)),
                                float(jnp.linalg.norm(X)), rtol=1e-4)
+
+
+def test_hadamard_matrix_non_pow2_raises_named_valueerror():
+    """hadamard_matrix rejects non-power-of-two sizes with a ValueError
+    naming n, never a strippable assert."""
+    with pytest.raises(ValueError, match="n=12"):
+        hadamard_matrix(12)
+    with pytest.raises(ValueError, match="power of two"):
+        hadamard_matrix(0)
+    assert hadamard_matrix(8).shape == (8, 8)

@@ -42,12 +42,22 @@ def test_regression_is_annotated_in_both_directions():
 def test_improvements_and_noise_stay_silent():
     mod = _load()
     base = _report(warm=dict(warm_us_per_request=100.0, measured_rps=50.0,
-                             spectral_error=0.5))
+                             spectral_error=0.5, config_k=64))
     cur = _report(warm=dict(warm_us_per_request=85.0,    # improved
                             measured_rps=52.0,           # improved
-                            spectral_error=9.9))         # untracked metric
+                            spectral_error=0.4,          # improved (tracked)
+                            config_k=512))               # untracked metric
     warnings, _ = mod.compare(base, cur, 0.2)
     assert warnings == []
+
+
+def test_spectral_error_regression_is_tracked():
+    mod = _load()
+    base = _report(cell=dict(spectral_error=0.1))
+    cur = _report(cell=dict(spectral_error=0.2))
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 1
+    assert "spectral_error rose" in warnings[0]
 
 
 def test_cells_on_one_side_are_informational():

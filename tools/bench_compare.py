@@ -44,6 +44,7 @@ TRACKED = {
     "occupancy": False,
     "achieved_gbps": False,
     "tracking_error": True,     # drift cells in BENCH_streaming.json
+    "spectral_error": True,     # estimation/refinement cells — accuracy gate
 }
 
 

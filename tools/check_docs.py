@@ -26,6 +26,7 @@ DOCTEST_MODULES = (
     "repro.core.summary_engine",
     "repro.core.estimation_engine",
     "repro.core.error_engine",
+    "repro.core.refinement",
     "repro.core.pipeline",
     "repro.core.streaming",
     "repro.serve.engine",
