@@ -849,6 +849,107 @@ def kernel_sweep(key, *, smoke: bool = False) -> dict:
     }
 
 
+def ingest_sweep(key, *, smoke: bool = False) -> dict:
+    """Multi-host ingest sweep: chunk pipelining x wire precision.
+
+    Overlap cells drive the same chunk stream through
+    ``StreamingSummarizer.ingest`` serial (``prefetch=0``: block after every
+    fused update, then fetch+stage the next chunk) vs double-buffered
+    (``prefetch=2``: chunk c+1 fetched and staged host->device while chunk c
+    computes). The fetch models per-chunk arrival latency (``fetch_ms`` in
+    the config — the storage/decode stall a real ingest pays per chunk);
+    serial eats it on the critical path, double-buffering hides it under
+    the fused update. Cells record ``chunks_per_sec``, ``rows_per_s``, and
+    ``achieved_gbps`` (the A+B bytes the pass ingests end-to-end over wall
+    time), timed best-of-``reps`` (pipelining is latency hiding, so the
+    floor is the signal — means smear scheduler noise in). Wire cells
+    compress the end-of-pass state at every ``WireSpec`` precision and
+    record ``wire_bytes_per_state``, the probe-measured ``wire_error``, and
+    the host-side ``wire_pack``+``wire_unpack`` round-trip time — the cost
+    of putting one state on the inter-host wire. The gate cell runs
+    ``choose_wire_spec`` at ``tol`` and records what the probe gate picked.
+    """
+    import numpy as np
+    from repro.core import streaming
+
+    if smoke:
+        d, n, k, chunk, reps = 16384, 128, 128, 512, 5
+    else:
+        d, n, k, chunk, reps = 65536, 256, 128, 2048, 5
+    probes, cosketch, tol, fetch_ms = 8, 8, 0.05, 2.0
+    A, B = _gd_pair(key, d, n, corr=0.3)
+    A_host, B_host = np.asarray(A), np.asarray(B)
+    del A, B
+    summ = core.StreamingSummarizer(k, probes=probes, cosketch=cosketch)
+    n_chunks = -(-d // chunk)
+    pass_bytes = A_host.nbytes + B_host.nbytes
+    results = []
+
+    def one_pass(prefetch):
+        st = summ.init(key, (d, n, n))
+
+        def chunks():
+            for off in range(0, d, chunk):
+                time.sleep(fetch_ms / 1e3)       # modeled arrival latency
+                yield A_host[off:off + chunk], B_host[off:off + chunk]
+        st = summ.ingest(st, chunks(), prefetch=prefetch)
+        jax.block_until_ready(st.A_acc)
+        return st
+
+    state = None
+    for prefetch in (0, 2):
+        st = one_pass(prefetch)                  # warm the executables
+        us = math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            st = one_pass(prefetch)
+            us = min(us, (time.perf_counter() - t0) * 1e6)
+        state = st
+        results.append({
+            "name": f"ingest/prefetch{prefetch}",
+            "prefetch": prefetch,
+            "us_per_call": us,
+            "chunks_per_sec": n_chunks / us * 1e6,
+            "rows_per_s": d / us * 1e6,
+            "achieved_gbps": pass_bytes / (us / 1e6) / 1e9,
+        })
+
+    f32_bytes = None
+    for spec in streaming.WIRE_DTYPES:
+        comp = streaming.compress_state(state, spec)
+        nbytes = streaming.wire_bytes(comp)
+        if spec == "f32":
+            f32_bytes = nbytes
+        _, us = _timed(
+            lambda c=comp: streaming.wire_unpack(streaming.wire_pack(c)))
+        results.append({
+            "name": f"wire/{spec}",
+            "us_per_call": us,
+            "wire_bytes_per_state": nbytes,
+            "bytes_ratio_vs_f32": f32_bytes / nbytes,
+            "wire_error": float(streaming.wire_error(state, spec)),
+        })
+
+    gate_spec, gate_err = streaming.choose_wire_spec(state, tol)
+    results.append({
+        "name": f"wire/gate_tol{tol}",
+        "chosen_spec": gate_spec.sketch,
+        "wire_error": float(gate_err),
+        "wire_bytes_per_state": streaming.wire_bytes(
+            streaming.compress_state(state, gate_spec)),
+    })
+
+    return {
+        "suite": "ingest",
+        "meta": _meta(smoke),
+        "config": {"d": d, "n": n, "k": k, "chunk": chunk, "reps": reps,
+                   "probes": probes, "cosketch": cosketch, "tol": tol,
+                   "fetch_ms": fetch_ms, "smoke": smoke,
+                   "backend_platform": jax.default_backend()},
+        "results": results,
+    }
+
+
 BENCHES = [
     ("fig2a_rescaled_jl", fig2a_rescaled_jl),
     ("fig2b_cone", fig2b_cone),
@@ -983,11 +1084,28 @@ def run_kernels_suite(key, out_path: str, smoke: bool) -> None:
               f"{rec['is_default']}", flush=True)
 
 
+def run_ingest_suite(key, out_path: str, smoke: bool) -> None:
+    report = ingest_sweep(jax.random.fold_in(
+        key, zlib.crc32(b"ingest") % 2**31), smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    print("name,chunks_per_sec|wire_bytes_per_state,achieved_gbps|wire_error")
+    for rec in report["results"]:
+        if "chunks_per_sec" in rec:
+            print(f"{rec['name']},{rec['chunks_per_sec']:.1f},"
+                  f"{rec['achieved_gbps']:.3f}", flush=True)
+        else:
+            print(f"{rec['name']},{rec['wire_bytes_per_state']},"
+                  f"{rec.get('wire_error', 0.0):.2e}", flush=True)
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite",
                    choices=("paper", "estimation", "streaming", "error",
-                            "serving", "traffic", "kernels", "all"),
+                            "serving", "traffic", "kernels", "ingest",
+                            "all"),
                    default="paper")
     p.add_argument("--smoke", action="store_true",
                    help="reduced sizes for CI smoke runs")
@@ -1001,6 +1119,8 @@ def main() -> None:
                    help="JSON artifact path for the serving suite")
     p.add_argument("--out-kernels", default="BENCH_kernels.json",
                    help="JSON artifact path for the kernel-perf suite")
+    p.add_argument("--out-ingest", default="BENCH_ingest.json",
+                   help="JSON artifact path for the multi-host ingest suite")
     args = p.parse_args()
     key = jax.random.PRNGKey(0)
     if args.suite in ("paper", "all"):
@@ -1017,6 +1137,8 @@ def main() -> None:
         run_traffic_suite(args.out_serving, args.smoke)
     if args.suite in ("kernels", "all"):
         run_kernels_suite(key, args.out_kernels, args.smoke)
+    if args.suite in ("ingest", "all"):
+        run_ingest_suite(key, args.out_ingest, args.smoke)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,11 @@ import numpy as np
 
 _SEP = "/"
 
+# ml_dtypes registers bfloat16 with numpy by name, but np.savez cannot
+# serialise it — bf16 leaves are stored as their uint16 bit pattern and the
+# manifest records which keys to view back on restore
+_BF16 = np.dtype("bfloat16")
+
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -44,12 +49,15 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     arrays, _ = _flatten(tree)
+    bf16 = sorted(k for k, v in arrays.items() if v.dtype == _BF16)
     np.savez(os.path.join(tmp, "arrays.npz"),
-             **{k: v for k, v in arrays.items()})
+             **{k: (v.view(np.uint16) if k in bf16 else v)
+                for k, v in arrays.items()})
     manifest = {
         "step": step,
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in arrays.items()},
+        "bf16_leaves": bf16,
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -92,6 +100,11 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(d, "arrays.npz"))
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            bf16 = set(json.load(f).get("bf16_leaves", []))
+    except FileNotFoundError:
+        bf16 = set()
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:
@@ -102,6 +115,8 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
                 f"pytree structure does not match the saved state (e.g. a "
                 f"decayed template against an undecayed checkpoint)")
         arr = data[key]
+        if key in bf16:
+            arr = arr.view(_BF16)
         expect = tuple(leaf.shape)
         if tuple(arr.shape) != expect:
             raise ValueError(
@@ -123,7 +138,9 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
 
 
 def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
-                      extra: Optional[dict] = None) -> str:
+                      extra: Optional[dict] = None,
+                      wire: Optional[str] = None,
+                      tol: Optional[float] = None) -> str:
     """Checkpoint a ``streaming.StreamState`` mid-pass (resumable ingestion).
 
     A StreamState is already a pytree, so this is ``save`` plus a manifest
@@ -131,7 +148,41 @@ def save_stream_state(ckpt_dir: str, step: int, state, *, keep: int = 3,
     enough for an operator to see how far a pass got without loading arrays.
     The carried key and SRHT plan are saved with the accumulators, so the
     restored state keeps absorbing rows under the identical randomness.
+
+    ``wire`` names a ``streaming.WireSpec`` precision ("f32"/"bf16"/"int8")
+    to write the checkpoint in the compressed wire format instead of raw
+    accumulators; ``tol`` instead runs the probe-measured gate
+    (``choose_wire_spec``) and writes the cheapest precision whose measured
+    relative error meets it. The manifest's ``wire`` record (spec, measured
+    error, wire bytes) tells ``restore_stream_state`` to decompress — and
+    tells an operator what the checkpoint costs on disk.
     """
+    wire_meta = None
+    if wire is not None or tol is not None:
+        from repro.core import streaming
+        if tol is not None:
+            spec, err = streaming.choose_wire_spec(
+                state, tol, specs=(("int8", "bf16", "f32") if wire is None
+                                   else (wire,)))
+        else:
+            spec = streaming._as_wire_spec(wire)
+            err = streaming.wire_error(state, spec) \
+                if state.probe_acc is not None else None
+        state = streaming.compress_state(state, spec)
+        wire_meta = {"spec": spec.sketch,
+                     "error": None if err is None else float(err),
+                     "bytes": int(streaming.wire_bytes(state))}
+        meta = {
+            "kind": "stream_state",
+            "wire": wire_meta,
+            "rows_seen": int(state.rows_seen),
+            "row_high": int(state.row_high),
+            "d_total": int(state.d_total),
+            "k": int(state.A_blk.shape[0]),
+            "srht": bool(state.srht),
+        }
+        meta.update(extra or {})
+        return save(ckpt_dir, step, state, keep=keep, extra=meta)
     meta = {
         "kind": "stream_state",
         "rows_seen": int(state.rows_seen),
@@ -161,7 +212,22 @@ def restore_stream_state(ckpt_dir: str, like, step: Optional[int] = None):
     from (key/plan values are overwritten by the checkpointed ones).
     Round-trips exactly: resuming then finalizing is bit-identical to the
     uninterrupted pass (tested in tests/core/test_streaming.py).
+
+    Checkpoints written with ``save_stream_state(..., wire=)`` (or ``tol=``)
+    are detected from the manifest's ``wire`` record: the restore template
+    is compressed to the recorded spec, restored leaf-for-leaf, then
+    decompressed back to a live ``StreamState`` — f32 wire checkpoints
+    round-trip bit-exactly.
     """
+    manifest = read_manifest(ckpt_dir, step=step)
+    wire_meta = manifest.get("extra", {}).get("wire")
+    if wire_meta is not None:
+        from repro.core import streaming
+        template = streaming.compress_state(like,
+                                            streaming.WireSpec(
+                                                wire_meta["spec"]))
+        return streaming.decompress_state(
+            restore(ckpt_dir, template, step=step))
     return restore(ckpt_dir, like, step=step)
 
 

@@ -14,6 +14,7 @@ Public API:
     distributed_sketch_summary / distributed_smppca       (multi-device pass)
     StreamingSummarizer / merge_states / finalize_state   (chunked ingestion)
     decay_state / WindowedSummarizer / window_bucket_key  (drifting streams)
+    WireSpec / compress_state / choose_wire_spec          (state on the wire)
     RefineSpec / refine_factors / refined_svd             (sketch-power refinement)
     cosketch_omega / cosketch_psi / attach_cosketch       (Tropp co-sketch block)
 """
@@ -50,9 +51,10 @@ from repro.core.distributed import (
     distributed_sketch_summary, distributed_smppca,
     distributed_streaming_summary, distributed_streaming_update)
 from repro.core.streaming import (
-    StreamingSummarizer, StreamState, WindowedSummarizer, WindowState,
-    decay_state, finalize_state, merge_states, tree_merge,
-    window_bucket_key)
+    CompressedState, StreamingSummarizer, StreamState, WindowedSummarizer,
+    WindowState, WireSpec, choose_wire_spec, compress_state, decay_state,
+    decompress_state, finalize_state, merge_states, tree_merge,
+    window_bucket_key, wire_bytes, wire_error, wire_pack, wire_unpack)
 from repro.core.refinement import (
     RefineSpec, attach_cosketch, cosketch_contribution, cosketch_key,
     cosketch_omega, cosketch_pass, cosketch_psi, cosketch_width,

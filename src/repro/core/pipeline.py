@@ -64,7 +64,7 @@ from typing import Callable, NamedTuple, Optional, Tuple, Union
 import jax
 import numpy as np
 
-from repro.core import error_engine, estimation_engine, summary_engine
+from repro.core import error_engine, estimation_engine, streaming, summary_engine
 from repro.core.refinement import RefineSpec, validate_refine
 from repro.core.types import EstimateResult, SketchSummary
 from repro.kernels.tuning import TuningSpec
@@ -162,6 +162,13 @@ class PipelinePlan(NamedTuple):
     pinned refinement never re-traces, and plans differing only in iters or
     method compile separately. ``None`` — the default, and the hash every
     pre-refinement plan has — leaves the pipeline bit-identical to before.
+
+    ``wire`` pins the transport precision for states this plan's streams
+    put on the wire (a hashable ``streaming.WireSpec`` — checkpoint writes
+    and cross-host merges; see docs/streaming.md "Scale-out ingest"). The
+    compute path never reads it, but it rides the NamedTuple so plans
+    differing only in transport hash apart. ``None`` — the default, and
+    the hash every pre-wire plan has — means lossless f32 transport.
     """
 
     sketch: SketchSpec = SketchSpec()
@@ -171,6 +178,7 @@ class PipelinePlan(NamedTuple):
     with_error: bool = False
     tuning: Optional[TuningSpec] = None
     refine: Optional[RefineSpec] = None
+    wire: Optional["streaming.WireSpec"] = None
 
 
 class PipelineResult(NamedTuple):
@@ -320,6 +328,11 @@ def validate_plan(plan: PipelinePlan) -> None:
             raise ValueError(f"PipelinePlan.tuning must be a TuningSpec or "
                              f"None, got {type(plan.tuning).__name__}")
         plan.tuning.validate()
+    if plan.wire is not None:
+        if not isinstance(plan.wire, streaming.WireSpec):
+            raise ValueError(f"PipelinePlan.wire must be a WireSpec or "
+                             f"None, got {type(plan.wire).__name__}")
+        streaming._as_wire_spec(plan.wire)
 
 
 def _signature(tree) -> tuple:

@@ -83,8 +83,11 @@ True
 """
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Iterable, NamedTuple, Optional, Sequence, Tuple
+import json
+import struct
+from typing import Iterable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -545,6 +548,58 @@ class StreamingSummarizer:
             off += A_chunk.shape[0]
         return self.finalize(state)
 
+    def ingest(self, state: StreamState,
+               chunks: Iterable[Tuple[jax.Array, jax.Array]], *,
+               row_offset: Optional[int] = None,
+               prefetch: int = 2) -> StreamState:
+        """Double-buffered sequential ingestion of ``(A_chunk, B_chunk)``
+        pairs in row order.
+
+        Up to ``prefetch`` upcoming chunks are staged host->device with
+        ``jax.device_put`` while the fused update for the current chunk is
+        still executing — jax dispatch is asynchronous, so the copy for
+        chunk ``c+1`` overlaps chunk ``c``'s compute and the pass approaches
+        memory-bandwidth speed instead of alternating copy/compute.
+        ``prefetch=0`` degrades to the serial copy-then-update loop (the
+        overlap-off baseline the ingest benchmark measures against).
+
+        The math is untouched: staging only moves bytes, so ``ingest`` is
+        **bit-identical** to the equivalent ``update`` loop at the same
+        chunk boundaries (tested in tests/core/test_streaming_ingest.py).
+        Chunks start at ``row_offset`` (default: the state's ``row_high``
+        cursor — the resume-contiguously convention of ``serve.engine``).
+        """
+        if isinstance(prefetch, bool) or not isinstance(prefetch, int) \
+                or prefetch < 0:
+            raise ValueError(
+                f"prefetch must be a non-negative chunk count, "
+                f"got {prefetch!r}")
+        off = int(state.row_high) if row_offset is None else int(row_offset)
+        it = iter(chunks)
+        staged: collections.deque = collections.deque()
+
+        def _stage_next() -> None:
+            try:
+                A_chunk, B_chunk = next(it)
+            except StopIteration:
+                return
+            staged.append((jax.device_put(A_chunk), jax.device_put(B_chunk)))
+
+        for _ in range(prefetch + 1):       # prime the pipeline
+            _stage_next()
+        while staged:
+            A_chunk, B_chunk = staged.popleft()
+            # enqueue the next host->device copy BEFORE dispatching the
+            # update when running serial (prefetch=0) would instead wait
+            if prefetch:
+                _stage_next()
+            state = self.update(state, A_chunk, B_chunk, off)
+            off += A_chunk.shape[0]
+            if not prefetch:
+                jax.block_until_ready(state.A_acc)
+                _stage_next()
+        return state
+
     def _absorb(self, state, A_chunk, B_chunk, gids, t, hi1) -> StreamState:
         if A_chunk.shape[0] != B_chunk.shape[0]:
             raise ValueError(f"chunk row counts differ: "
@@ -573,6 +628,285 @@ class StreamingSummarizer:
             row_high=jnp.maximum(state.row_high,
                                  jnp.asarray(hi1, jnp.int32)),
             probe_acc=probe_acc, cosketch_Y=c_Y, cosketch_W=c_W)
+
+
+# -- wire format: compressed StreamState for checkpoints and transfer --------
+
+#: sketch-block precisions a WireSpec may name, cheapest-last
+WIRE_DTYPES = ("f32", "bf16", "int8")
+
+
+class WireSpec(NamedTuple):
+    """On-the-wire precision policy for a compressed ``StreamState``.
+
+    One knob: the storage dtype of the *sketch-shaped* blocks (the two
+    sketches and, when carried, the co-sketch pair) — they dominate the
+    state's bytes and are noise-floored by sketching error anyway. The
+    squared-norm vectors and the held-out probe block always stay f32: the
+    norms are the rescaled estimator's whole advantage, and the probe block
+    is the exact side information that *measures* what quantization cost
+    (``wire_error``), so it must not itself be quantized. A NamedTuple of
+    one string: hashable, so it can ride ``PipelinePlan`` as a cache key.
+
+    >>> WireSpec("bf16").bits
+    16
+    >>> WireSpec() == WireSpec("f32")   # default: lossless
+    True
+    """
+
+    sketch: str = "f32"
+
+    @property
+    def bits(self) -> int:
+        """Storage bits per sketch-block value."""
+        return {"f32": 32, "bf16": 16, "int8": 8}[self.sketch]
+
+
+class CompressedState(NamedTuple):
+    """Arrays-only wire image of a *settled* ``StreamState``.
+
+    Everything derivable from ``key`` is dropped: the probe test matrix,
+    the co-sketch test pair, and the SRHT sign/sample plan are pure
+    functions of ``(key, shape)`` under the engine's randomness contract,
+    so ``decompress_state`` regenerates them bit-identically instead of
+    shipping them. ``srht`` is a 0/1 scalar recording which method's plan
+    to rebuild. Pending decay is settled by ``compress_state``, so only
+    ``t_state`` travels (``t_data == t_state`` on arrival). ``*_scale``
+    fields are the per-slice symmetric dequantization scales (int8 only).
+    """
+
+    key: jax.Array
+    A_blk: jax.Array                     # (k, n1) sketch, spec dtype
+    B_blk: jax.Array                     # (k, n2) sketch, spec dtype
+    na2: jax.Array                       # (n1,) f32 — never quantized
+    nb2: jax.Array                       # (n2,) f32 — never quantized
+    rows_seen: jax.Array
+    row_high: jax.Array
+    d_total: jax.Array
+    srht: jax.Array                      # () int32: 1 = rebuild an SRHT plan
+    A_scale: Optional[jax.Array] = None  # (k, 1) int8 dequant scales
+    B_scale: Optional[jax.Array] = None  # (k, 1)
+    probe_acc: Optional[jax.Array] = None   # (n1, p) f32 — never quantized
+    decay_rate: Optional[jax.Array] = None
+    t_state: Optional[jax.Array] = None
+    cosketch_Y: Optional[jax.Array] = None  # (n1, s) spec dtype
+    cosketch_W: Optional[jax.Array] = None  # (l, n2) spec dtype
+    Y_scale: Optional[jax.Array] = None     # (1, s) int8 dequant scales
+    W_scale: Optional[jax.Array] = None     # (l, 1)
+
+
+def _as_wire_spec(spec: Union[WireSpec, str]) -> WireSpec:
+    spec = WireSpec(spec) if isinstance(spec, str) else spec
+    if not isinstance(spec, WireSpec) or spec.sketch not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire spec must name a sketch dtype in {WIRE_DTYPES}, "
+            f"got {spec!r}")
+    return spec
+
+
+def _quant_block(x: jax.Array, spec: WireSpec, axis: int):
+    """(stored block, dequant scale or None) for one sketch-shaped block.
+
+    int8 is symmetric per-slice along ``axis`` (scale = max|x| / 127 with
+    keepdims, clamped away from zero so all-zero slices stay exact zeros).
+    """
+    if spec.sketch == "f32":
+        return x, None
+    if spec.sketch == "bf16":
+        return x.astype(jnp.bfloat16), None
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=axis, keepdims=True),
+                        jnp.float32(1e-30)) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_block(blk: jax.Array, scale: Optional[jax.Array]) -> jax.Array:
+    if blk.dtype == jnp.int8:
+        return blk.astype(jnp.float32) * scale
+    return blk.astype(jnp.float32)
+
+
+def compress_state(state: StreamState,
+                   spec: Union[WireSpec, str] = WireSpec()
+                   ) -> CompressedState:
+    """StreamState -> its wire image under ``spec``.
+
+    Settles pending decay first (the wire carries one timestamp), then
+    stores the sketch-shaped blocks at the spec's precision and everything
+    else f32. With the default f32 spec, ``decompress_state`` returns a
+    state **bit-identical** to the settled input — structure included
+    (property-tested in tests/core/test_streaming_ingest.py).
+    """
+    spec = _as_wire_spec(spec)
+    if state.key is None:
+        raise ValueError(
+            "compress_state needs the state's base key: the wire format "
+            "regenerates the probe/co-sketch test matrices and the SRHT "
+            "plan from it instead of shipping them")
+    state = _settle_state(state)
+    A_blk, A_scale = _quant_block(state.A_acc, spec, 1)
+    B_blk, B_scale = _quant_block(state.B_acc, spec, 1)
+    c_Y = c_W = Y_s = W_s = None
+    if state.cosketch_Y is not None:
+        c_Y, Y_s = _quant_block(state.cosketch_Y, spec, 0)
+        c_W, W_s = _quant_block(state.cosketch_W, spec, 1)
+    return CompressedState(
+        key=state.key, A_blk=A_blk, B_blk=B_blk,
+        na2=state.na2, nb2=state.nb2,
+        rows_seen=state.rows_seen, row_high=state.row_high,
+        d_total=state.d_total,
+        srht=jnp.asarray(0 if state.signs is None else 1, jnp.int32),
+        A_scale=A_scale, B_scale=B_scale,
+        probe_acc=state.probe_acc,
+        decay_rate=state.decay_rate, t_state=state.t_state,
+        cosketch_Y=c_Y, cosketch_W=c_W, Y_scale=Y_s, W_scale=W_s)
+
+
+def decompress_state(comp: CompressedState) -> StreamState:
+    """Wire image -> a full ``StreamState`` ready to keep absorbing rows.
+
+    Rebuilds every key-derived field (probe omega, co-sketch test pair,
+    SRHT plan) from ``comp.key`` — bit-identical to the originals by the
+    (key, index) randomness contract — and dequantizes the sketch blocks.
+    """
+    k, n1 = comp.A_blk.shape
+    n2 = comp.B_blk.shape[1]
+    if int(comp.srht):
+        signs, srows, _ = srht_plan(comp.key, int(comp.d_total), k)
+    else:
+        signs = srows = None
+    omega = None
+    if comp.probe_acc is not None:
+        from repro.core.error_engine import probe_omega
+        omega = probe_omega(comp.key, n2, comp.probe_acc.shape[1])
+    c_omega = c_psi = c_Y = c_W = None
+    if comp.cosketch_Y is not None:
+        from repro.core.refinement import cosketch_omega, cosketch_psi
+        s = comp.cosketch_Y.shape[1]
+        c_omega = cosketch_omega(comp.key, n2, s)
+        c_psi = cosketch_psi(comp.key, n1, s)
+        c_Y = _dequant_block(comp.cosketch_Y, comp.Y_scale)
+        c_W = _dequant_block(comp.cosketch_W, comp.W_scale)
+    return StreamState(
+        key=comp.key,
+        A_acc=_dequant_block(comp.A_blk, comp.A_scale),
+        B_acc=_dequant_block(comp.B_blk, comp.B_scale),
+        na2=comp.na2, nb2=comp.nb2,
+        rows_seen=comp.rows_seen, row_high=comp.row_high,
+        d_total=comp.d_total, signs=signs, srows=srows,
+        omega=omega, probe_acc=comp.probe_acc,
+        decay_rate=comp.decay_rate,
+        t_state=comp.t_state, t_data=comp.t_state,
+        cosketch_omega=c_omega, cosketch_psi=c_psi,
+        cosketch_Y=c_Y, cosketch_W=c_W)
+
+
+def wire_bytes(comp: CompressedState) -> int:
+    """Payload bytes of a wire image (array bytes; the pack header — a few
+    dozen bytes of field names — is excluded)."""
+    return sum(int(leaf.nbytes) for leaf in comp if leaf is not None)
+
+
+def wire_pack(comp: CompressedState) -> bytes:
+    """Serialize a wire image to self-describing bytes (a JSON field header
+    + raw little-endian array payloads) — what actually crosses hosts in
+    ``dist.multihost.cross_host_merge`` and lands in compressed
+    checkpoints' transport tests."""
+    import numpy as np
+    header, payload = [], []
+    for name, leaf in zip(comp._fields, comp):
+        if leaf is None:
+            continue
+        # NOTE: not ascontiguousarray — it promotes 0-d scalars to 1-d,
+        # and tobytes() already serialises any layout in C order
+        arr = np.asarray(leaf)
+        header.append({"field": name, "dtype": str(arr.dtype),
+                       "shape": list(arr.shape)})
+        payload.append(arr.tobytes())
+    head = json.dumps(header).encode("utf-8")
+    return struct.pack("<I", len(head)) + head + b"".join(payload)
+
+
+def wire_unpack(data: bytes) -> CompressedState:
+    """Inverse of ``wire_pack``."""
+    import numpy as np
+    (hlen,) = struct.unpack_from("<I", data, 0)
+    header = json.loads(data[4:4 + hlen].decode("utf-8"))
+    off = 4 + hlen
+    kw = {}
+    for field in header:
+        dt = np.dtype(field["dtype"])
+        count = 1
+        for dim in field["shape"]:
+            count *= int(dim)
+        arr = np.frombuffer(data, dtype=dt, count=count, offset=off)
+        kw[field["field"]] = jnp.asarray(arr.reshape(field["shape"]))
+        off += dt.itemsize * count
+    return CompressedState(**kw)
+
+
+def wire_error(state: StreamState, spec: Union[WireSpec, str]) -> float:
+    """Probe-measured relative error a round-trip through ``spec`` adds.
+
+    The held-out probe block ``b_j = (A^T B) w_j`` is *exact* side
+    information riding the state, so quantization cost is measurable
+    without ever forming the n1 x n2 product: sketch-estimate each probe
+    from the original and the decompressed state (``A_acc^T (B_acc w_j)``,
+    O(k·n·p)), and return
+
+        sqrt(mean_j ||dev_j||^2 / ||w_j||^2) / ||M||_F_est,
+
+    where ``dev_j`` is the per-probe deviation and ``||M||_F_est`` is the
+    ErrorEngine's unbiased Frobenius estimate from the exact probe block —
+    the same estimator ``estimate_error`` applies to the decompressed
+    summary. f32 round-trips are bit-identical, so their error is exactly
+    0.0; the result feeds the ``choose_wire_spec`` gate.
+    """
+    if state.omega is None:
+        raise ValueError(
+            "wire_error needs the held-out probe block (init the stream "
+            "with probes>0) — it is the exact reference quantization "
+            "error is measured against")
+    spec = _as_wire_spec(spec)
+    settled = _settle_state(state)
+    rt = decompress_state(compress_state(settled, spec))
+    w = settled.omega
+
+    def sketch_probe(s: StreamState) -> jax.Array:
+        return s.A_acc.T @ (s.B_acc @ w)        # ~ M @ w, never n1 x n2
+
+    dev = sketch_probe(rt) - sketch_probe(settled)
+    wn2 = jnp.sum(w.astype(jnp.float32) ** 2, axis=0)
+    frob_dev = jnp.sqrt(jnp.mean(jnp.sum(dev ** 2, axis=0) / wn2))
+    frob_m = jnp.sqrt(jnp.mean(
+        jnp.sum(settled.probe_acc ** 2, axis=0) / wn2))
+    return float(frob_dev / jnp.maximum(frob_m, jnp.float32(1e-30)))
+
+
+def choose_wire_spec(state: StreamState, tol: float,
+                     specs: Sequence[Union[WireSpec, str]] =
+                     ("int8", "bf16", "f32")
+                     ) -> Tuple[WireSpec, float]:
+    """The probe-measured compression gate: cheapest spec meeting ``tol``.
+
+    Tries ``specs`` in order (fewest wire bytes first) and returns the
+    first whose ``wire_error`` is within ``tol``, with the measured error.
+    f32 is lossless (error exactly 0.0), so the gate is total: when no
+    candidate meets ``tol`` it falls back to f32. Used before checkpoint
+    writes
+    (``ckpt.checkpoint.save_stream_state(wire="auto")``) and inter-host
+    transfer (``dist.multihost.cross_host_merge``).
+    """
+    if isinstance(tol, bool) or not isinstance(tol, (int, float)) \
+            or not float(tol) > 0.0:
+        raise ValueError(
+            f"gate tolerance must be a positive relative error, got {tol!r}")
+    for spec in specs:
+        spec = _as_wire_spec(spec)
+        err = 0.0 if spec.sketch == "f32" else wire_error(state, spec)
+        if err <= float(tol):
+            return spec, err
+    return WireSpec("f32"), 0.0   # lossless meets any tolerance
 
 
 # -- sliding window over epochs ----------------------------------------------
@@ -747,6 +1081,19 @@ class WindowedSummarizer:
         slot = int(wstate.head) % self.n_buckets
         return self._with_head_bucket(wstate, self._inner.update_rows(
             wstate.buckets[slot], row_ids, A_rows, B_rows))
+
+    def ingest(self, wstate: WindowState,
+               chunks: Iterable[Tuple[jax.Array, jax.Array]], *,
+               row_offset: Optional[int] = None,
+               prefetch: int = 2) -> WindowState:
+        """Double-buffered ingestion into the head epoch: delegates to the
+        inner ``StreamingSummarizer.ingest`` on the head bucket (same
+        overlap, same bit-parity contract, bucket-local row ids)."""
+        self._check_ring(wstate)
+        slot = int(wstate.head) % self.n_buckets
+        return self._with_head_bucket(wstate, self._inner.ingest(
+            wstate.buckets[slot], chunks, row_offset=row_offset,
+            prefetch=prefetch))
 
     def slide(self, wstate: WindowState, n: int = 1) -> WindowState:
         """Advance the window by ``n`` epochs — O(1) per epoch: the expiring

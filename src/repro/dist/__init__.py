@@ -1,9 +1,12 @@
-"""repro.dist — mesh context + path-based sharding rules.
+"""repro.dist — mesh context, sharding rules, and multi-host ingest.
 
 ``meshctx``   registers the active mesh for activation constraints
               (models.transformer.constrain_act) without threading it
               through every call signature.
 ``sharding``  maps parameter / cache pytree paths to PartitionSpecs
               (fsdp_tp / tp_only policies, divisibility fallbacks).
+``multihost`` jax.distributed init gate, (host, device) process topology,
+              per-host shard ingestion, and the compressed cross-host
+              StreamState merge (docs/streaming.md "Scale-out ingest").
 """
-from repro.dist import meshctx, sharding
+from repro.dist import meshctx, multihost, sharding

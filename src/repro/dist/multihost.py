@@ -1,0 +1,223 @@
+"""Multi-host streaming ingest: process topology + compressed cross-host merge.
+
+Scales the one-pass summary beyond a single process. Each host streams its
+own contiguous shard of the global rows through the double-buffered
+``StreamingSummarizer.ingest`` (rows never leave the host that read them),
+then ONE exchange of compressed ``StreamState`` wire images replicates the
+merged global state everywhere — the mergeable-summary contract applied to
+comms: what crosses hosts is the probe-gated ``wire_pack`` bytes, never the
+data.
+
+Three layers:
+
+* ``initialize`` — gated ``jax.distributed`` setup. Resolves the
+  coordinator cell from arguments or the ``REPRO_COORDINATOR`` /
+  ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID`` environment (the
+  tests/dist/helpers.py launch convention) and is a ``False``-returning
+  no-op in single-process runs, so the same entry point serves laptops and
+  fleets.
+* ``host_mesh`` / ``host_shard_range`` — the process topology: a
+  ``(host, device)`` 2-D mesh for the hierarchical tree-reduce in
+  ``core.distributed`` (intra-host psum over local devices, then one
+  inter-host all-reduce per accumulator block), and the balanced contiguous
+  row range each host ingests (ragged-tolerant: the first ``d % hosts``
+  hosts take one extra row).
+* ``cross_host_merge`` / ``sharded_ingest`` — the inter-host exchange.
+  States travel through the distributed coordinator's key-value store as
+  ``wire_pack`` bytes (XLA cross-process collectives are unavailable on the
+  CPU backend, and the KV store is exactly a byte wire); every host gathers
+  all wire images and ``tree_merge``s them in ascending process order, so
+  the merged state is **bit-identical on every host**. With ``tol`` set,
+  each host votes a probe-gated ``WireSpec`` and the most conservative
+  (highest-precision) vote wins — the gate stays collective-consistent.
+
+>>> import jax
+>>> host_shard_range(10, hosts=4, host=0)   # balanced, ragged-tolerant
+(0, 3)
+>>> host_shard_range(10, hosts=4, host=3)
+(8, 10)
+>>> initialize()        # no coordinator configured: single-process no-op
+False
+>>> process_topology()
+(0, 1)
+>>> from repro.core.streaming import StreamingSummarizer
+>>> key = jax.random.PRNGKey(0)
+>>> A = jax.random.normal(key, (40, 6))
+>>> B = jax.random.normal(jax.random.fold_in(key, 1), (40, 4))
+>>> state = sharded_ingest(StreamingSummarizer(k=8), key, (40, 6, 4),
+...                        lambda lo, hi: (A[lo:hi], B[lo:hi]), chunk=16)
+>>> int(state.rows_seen)        # single process ingests the whole range
+40
+"""
+from __future__ import annotations
+
+import itertools
+import os
+from typing import Callable, Iterator, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def _env_int(name: str) -> Optional[int]:
+    raw = os.environ.get(name)
+    return int(raw) if raw else None
+
+
+def initialize(coordinator_address: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None,
+               local_device_ids=None) -> bool:
+    """Initialize ``jax.distributed`` when a multi-process cell is configured.
+
+    Arguments fall back to the ``REPRO_COORDINATOR`` (host:port),
+    ``REPRO_NUM_PROCESSES``, and ``REPRO_PROCESS_ID`` environment. Without
+    a coordinator, or with a single process, this is a no-op returning
+    ``False`` — the caller's code path is identical either way
+    (``process_topology`` then reports ``(0, 1)``).
+    """
+    if coordinator_address is None:
+        coordinator_address = os.environ.get("REPRO_COORDINATOR")
+    if num_processes is None:
+        num_processes = _env_int("REPRO_NUM_PROCESSES")
+    if process_id is None:
+        process_id = _env_int("REPRO_PROCESS_ID")
+    if coordinator_address is None or not num_processes \
+            or int(num_processes) <= 1:
+        return False
+    jax.distributed.initialize(
+        coordinator_address, int(num_processes), int(process_id or 0),
+        local_device_ids=local_device_ids)
+    return True
+
+
+def process_topology() -> Tuple[int, int]:
+    """``(process_index, process_count)`` of the running cell."""
+    return jax.process_index(), jax.process_count()
+
+
+def host_mesh(hosts: Optional[int] = None, *, host_axis: str = "host",
+              device_axis: str = "device") -> Mesh:
+    """The ``(host, device)`` 2-D mesh over all global devices.
+
+    Pass ``axis=(host_axis, device_axis)`` into ``core.distributed`` for
+    the hierarchical tree-reduce. ``hosts`` defaults to the cell's process
+    count; overriding it emulates a multi-host hierarchy on one process's
+    devices (how tests/dist exercise the reduce on 4 fake CPU devices).
+    """
+    hosts = jax.process_count() if hosts is None else int(hosts)
+    devices = np.array(jax.devices())
+    if hosts < 1 or len(devices) % hosts != 0:
+        raise ValueError(
+            f"{len(devices)} devices do not split over {hosts} hosts")
+    return Mesh(devices.reshape(hosts, -1), (host_axis, device_axis))
+
+
+def host_shard_range(d: int, *, hosts: Optional[int] = None,
+                     host: Optional[int] = None) -> Tuple[int, int]:
+    """Contiguous global row range ``[lo, hi)`` that ``host`` ingests.
+
+    Balanced to within one row (the first ``d % hosts`` hosts take the
+    extra), covering ``0..d`` exactly once across the cell — the per-host
+    shard map of ``sharded_ingest``. Defaults describe the calling process.
+    """
+    hosts = jax.process_count() if hosts is None else int(hosts)
+    host = jax.process_index() if host is None else int(host)
+    if hosts < 1 or not 0 <= host < hosts:
+        raise ValueError(f"host {host} outside a {hosts}-host cell")
+    if d < 0:
+        raise ValueError(f"row count must be non-negative, got {d}")
+    base, extra = divmod(d, hosts)
+    lo = host * base + min(host, extra)
+    return lo, lo + base + (1 if host < extra else 0)
+
+
+# one monotone sequence per process: cross_host_merge is a collective —
+# every host calls it the same number of times, so sequence numbers agree
+# and KV keys never collide across rounds
+_MERGE_SEQ = itertools.count()
+
+
+def _kv_client():
+    from jax._src import distributed
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError(
+            "cross_host_merge needs the jax.distributed coordinator "
+            "(call dist.multihost.initialize first)")
+    return client
+
+
+def cross_host_merge(state, *, wire: Union[str, None] = None,
+                     tol: Optional[float] = None,
+                     timeout: float = 60.0):
+    """Merge per-host partial ``StreamState``s into the global state.
+
+    A collective: every process calls it with its local partial state and
+    every process returns the same merged state, bit-identical across the
+    cell (all hosts decompress the same wire images and reduce them with
+    the same ascending-process ``tree_merge``). The transfer is the
+    compressed wire format — ``wire`` names a ``WireSpec`` precision
+    (default lossless f32), or ``tol`` turns on the probe-measured gate:
+    each host runs ``choose_wire_spec`` on its own partial state, votes,
+    and the most conservative vote is used by everyone (quantized merge
+    error stays within every host's measured bound). Single-process cells
+    return the state unchanged — the local path stays wire-free.
+    """
+    if jax.process_count() == 1:
+        return state
+    from repro.core import streaming
+    client = _kv_client()
+    seq = next(_MERGE_SEQ)
+    pid, nproc = jax.process_index(), jax.process_count()
+    t_ms = max(1, int(timeout * 1000))
+    if tol is not None:
+        spec, _ = streaming.choose_wire_spec(state, tol)
+    else:
+        spec = streaming._as_wire_spec("f32" if wire is None else wire)
+    # vote: highest precision wins, so no host's measured gate is violated
+    rank = {name: i for i, name in enumerate(streaming.WIRE_DTYPES)}
+    client.key_value_set(f"repro/merge/{seq}/spec/{pid}", spec.sketch)
+    votes = [client.blocking_key_value_get(f"repro/merge/{seq}/spec/{i}",
+                                           t_ms) for i in range(nproc)]
+    spec = streaming.WireSpec(min(votes, key=lambda v: rank[v]))
+    blob = streaming.wire_pack(streaming.compress_state(state, spec))
+    client.key_value_set_bytes(f"repro/merge/{seq}/state/{pid}", blob)
+    parts = [
+        streaming.decompress_state(streaming.wire_unpack(
+            client.blocking_key_value_get_bytes(
+                f"repro/merge/{seq}/state/{i}", t_ms)))
+        for i in range(nproc)]
+    return streaming.tree_merge(parts)
+
+
+def sharded_ingest(summarizer, key, shapes: Tuple[int, int, int],
+                   fetch: Callable[[int, int], tuple], *,
+                   chunk: int = 4096, prefetch: int = 2,
+                   wire: Union[str, None] = None,
+                   tol: Optional[float] = None,
+                   timeout: float = 60.0):
+    """Full multi-host pass: ingest this host's shard, then merge the cell.
+
+    ``fetch(lo, hi)`` returns the ``(A_rows, B_rows)`` slab of global rows
+    ``[lo, hi)`` — each host only ever fetches its own ``host_shard_range``,
+    in ``chunk``-row pieces driven through the double-buffered
+    ``StreamingSummarizer.ingest`` (``prefetch`` chunks staged
+    host->device ahead of the fused update). The final ``cross_host_merge``
+    replicates the global state on every host; ``wire``/``tol`` choose the
+    transfer precision as documented there.
+    """
+    if not isinstance(chunk, int) or isinstance(chunk, bool) or chunk < 1:
+        raise ValueError(f"chunk must be a positive row count, got {chunk!r}")
+    d = shapes[0]
+    lo, hi = host_shard_range(d)
+    state = summarizer.init(key, shapes)
+
+    def _chunks() -> Iterator[tuple]:
+        for off in range(lo, hi, chunk):
+            yield fetch(off, min(off + chunk, hi))
+
+    state = summarizer.ingest(state, _chunks(), row_offset=lo,
+                              prefetch=prefetch)
+    return cross_host_merge(state, wire=wire, tol=tol, timeout=timeout)

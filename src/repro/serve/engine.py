@@ -508,11 +508,68 @@ class SketchService:
         sess.rows_seen += A_chunk.shape[0]
         return sess.rows_seen
 
+    def append_async(self, stream_id: int, chunks, *,
+                     prefetch: int = 2) -> int:
+        """Absorb an iterator of ``(A_chunk, B_chunk)`` pairs with
+        double-buffered host->device pipelining.
+
+        Drives the session's accumulator through
+        ``StreamingSummarizer.ingest``: up to ``prefetch`` upcoming chunks
+        are staged onto the device (``jax.device_put``) while the fused
+        update for the current chunk runs, so a long contiguous append
+        approaches memory-bandwidth speed. Bit-identical to the equivalent
+        ``append`` loop at the same chunk boundaries. Chunks are contiguous
+        from the session cursor (windowed sessions ingest into the head
+        epoch). Returns total rows absorbed so far (host-side count — the
+        iterator is consumed, the device is never synced).
+        """
+        sess = self._session(stream_id)
+        rows = 0
+
+        def _counted():
+            nonlocal rows
+            for A_chunk, B_chunk in chunks:
+                rows += A_chunk.shape[0]
+                yield A_chunk, B_chunk
+
+        sess.state = sess.summarizer.ingest(
+            sess.state, _counted(), row_offset=sess.next_row,
+            prefetch=prefetch)
+        sess.next_row += rows
+        sess.rows_seen += rows
+        return sess.rows_seen
+
     def query(self, stream_id: int) -> SketchSummary:
         """Finalized summary of the live accumulator (non-destructive: the
         session keeps absorbing chunks afterwards)."""
         sess = self._session(stream_id)
         return sess.summarizer.finalize(sess.state)
+
+    def export_stream(self, stream_id: int, *, wire=None,
+                      tol: Optional[float] = None):
+        """The live accumulator as a compressed wire image for transfer.
+
+        Non-destructive. ``wire`` names a ``streaming.WireSpec`` precision
+        (default lossless f32); ``tol`` instead runs the probe-measured
+        gate (``streaming.choose_wire_spec`` — cheapest precision whose
+        measured relative error fits; needs ``SketchService(probes=p)``).
+        Windowed sessions export their merged window under the session's
+        *base* key — the window's shared probe/co-sketch matrices derive
+        from it, so the far side regenerates them correctly; the export is
+        a query snapshot (ingestion resumes in the per-epoch buckets, not
+        in the export). The bytes for the wire come from
+        ``streaming.wire_pack`` on the returned image.
+        """
+        from repro.core import streaming
+        sess = self._session(stream_id)
+        state = sess.state
+        if isinstance(sess.summarizer, WindowedSummarizer):
+            state = sess.summarizer.merged(state)._replace(key=sess.key)
+        if tol is not None:
+            spec, _ = streaming.choose_wire_spec(state, tol)
+        else:
+            spec = "f32" if wire is None else wire
+        return streaming.compress_state(state, spec)
 
     def stream_factors(self, stream_id: int, r=None, *,
                        tol: Optional[float] = None,

@@ -8,6 +8,8 @@ set before jax initializes.
 from __future__ import annotations
 
 import os
+import re
+import socket
 import subprocess
 import sys
 import textwrap
@@ -16,19 +18,72 @@ _SRC = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
+def _child_env(n_devices: int) -> dict:
+    """Environment for a fresh-interpreter jax child with ``n_devices`` fake
+    CPU devices. Any inherited device-count flag (the CI dist lane exports
+    one for the parent process) is stripped so the child's count wins."""
+    env = dict(os.environ)
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + inherited).strip()
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
 def run_with_devices(code: str, n_devices: int = 8,
                      timeout: int = 300) -> str:
     """Run ``code`` in a subprocess with n_devices fake CPU devices; returns
     stdout. Raises with both streams attached if the subprocess fails."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
-                        + env.get("XLA_FLAGS", "")).strip()
-    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.setdefault("JAX_PLATFORMS", "cpu")
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, env=env, timeout=timeout)
+        capture_output=True, text=True, env=_child_env(n_devices),
+        timeout=timeout)
     assert proc.returncode == 0, (
         f"subprocess failed (rc={proc.returncode})\n"
         f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
     return proc.stdout
+
+
+def free_port() -> int:
+    """An OS-assigned free localhost TCP port (the coordinator address)."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_multiprocess(code: str, n_procs: int = 2, n_devices: int = 1,
+                     timeout: int = 300) -> list[str]:
+    """Run ``code`` in ``n_procs`` concurrent interpreters forming one
+    ``jax.distributed`` localhost cell; returns each process's stdout in
+    process order. The cell is wired through the ``REPRO_COORDINATOR`` /
+    ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID`` environment, so the code
+    under test joins it with a bare ``dist.multihost.initialize()`` — the
+    exact call production entry points make.
+    """
+    coord = f"127.0.0.1:{free_port()}"
+    procs = []
+    for pid in range(n_procs):
+        env = _child_env(n_devices)
+        env.update(REPRO_COORDINATOR=coord,
+                   REPRO_NUM_PROCESSES=str(n_procs),
+                   REPRO_PROCESS_ID=str(pid))
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env))
+    outs, fails = [], []
+    for pid, p in enumerate(procs):
+        try:
+            out, err = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append(out)
+        if p.returncode != 0:
+            fails.append(f"process {pid} rc={p.returncode}\n"
+                         f"--- stdout ---\n{out}\n--- stderr ---\n{err}")
+    assert not fails, "\n".join(fails)
+    return outs

@@ -1,0 +1,327 @@
+"""Multi-host ingest: topology helpers, sharded ingestion, and the
+compressed cross-host merge.
+
+In-process tests cover the single-process (laptop) behaviour of every
+``repro.dist.multihost`` entry point — the same code paths a fleet runs,
+minus the coordinator. ``@pytest.mark.dist`` tests spawn their own
+interpreters: a 4-fake-device cell for the hierarchical tree-reduce parity
+claims, and a real 2-process ``jax.distributed`` localhost cell for the
+wire-format merge.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.streaming import StreamingSummarizer
+from repro.dist import multihost
+
+
+# ---------------------------------------------------------------------------
+# in-process: topology helpers
+
+
+def test_host_shard_range_covers_and_balances():
+    for d in (0, 1, 7, 10, 64, 101):
+        for hosts in (1, 2, 3, 4, 7):
+            ranges = [multihost.host_shard_range(d, hosts=hosts, host=h)
+                      for h in range(hosts)]
+            # contiguous cover of [0, d) in host order
+            assert ranges[0][0] == 0 and ranges[-1][1] == d
+            for (a, b), (c, _) in zip(ranges, ranges[1:]):
+                assert b == c
+            sizes = [hi - lo for lo, hi in ranges]
+            assert max(sizes) - min(sizes) <= 1
+            # the first d % hosts hosts take the extra row
+            assert sizes == sorted(sizes, reverse=True)
+
+
+def test_host_shard_range_validates():
+    with pytest.raises(ValueError):
+        multihost.host_shard_range(10, hosts=2, host=2)
+    with pytest.raises(ValueError):
+        multihost.host_shard_range(10, hosts=0, host=0)
+    with pytest.raises(ValueError):
+        multihost.host_shard_range(-1, hosts=2, host=0)
+
+
+def test_initialize_is_noop_without_coordinator(monkeypatch):
+    for var in ("REPRO_COORDINATOR", "REPRO_NUM_PROCESSES",
+                "REPRO_PROCESS_ID"):
+        monkeypatch.delenv(var, raising=False)
+    assert multihost.initialize() is False
+    # an explicit single-process cell is equally a no-op
+    assert multihost.initialize("127.0.0.1:1234", 1, 0) is False
+    # a configured address with no process count is still single-process
+    monkeypatch.setenv("REPRO_COORDINATOR", "127.0.0.1:1234")
+    assert multihost.initialize() is False
+
+
+def test_process_topology_single_process():
+    assert multihost.process_topology() == (0, 1)
+
+
+def test_host_mesh_single_process():
+    mesh = multihost.host_mesh()
+    assert mesh.shape["host"] == 1
+    assert mesh.shape["device"] == len(jax.devices())
+    mesh = multihost.host_mesh(host_axis="h", device_axis="d")
+    assert tuple(mesh.axis_names) == ("h", "d")
+    with pytest.raises(ValueError):
+        multihost.host_mesh(len(jax.devices()) + 1)
+
+
+def test_kv_client_requires_coordinator():
+    with pytest.raises(RuntimeError, match="coordinator"):
+        multihost._kv_client()
+
+
+# ---------------------------------------------------------------------------
+# in-process: single-process ingest + merge
+
+
+def test_cross_host_merge_single_process_is_passthrough(key):
+    summ = StreamingSummarizer(8, probes=4)
+    st = summ.init(key, (32, 6, 5))
+    st = summ.update(st, jnp.ones((32, 6)), jnp.ones((32, 5)), 0)
+    out = multihost.cross_host_merge(st, wire="bf16", tol=None)
+    assert out is st          # no wire, no copy on a 1-process cell
+
+
+def test_sharded_ingest_single_process_matches_local(key):
+    d, na, nb, chunk = 50, 7, 5, 16
+    A = jax.random.normal(key, (d, na))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (d, nb))
+    summ = StreamingSummarizer(8, probes=4, cosketch=4)
+
+    got = multihost.sharded_ingest(
+        summ, key, (d, na, nb),
+        lambda lo, hi: (A[lo:hi], B[lo:hi]), chunk=chunk)
+
+    ref = summ.init(key, (d, na, nb))
+    for off in range(0, d, chunk):
+        ref = summ.update(ref, A[off:off + chunk], B[off:off + chunk], off)
+
+    assert int(got.rows_seen) == d
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_ingest_validates_chunk(key):
+    summ = StreamingSummarizer(8)
+    for bad in (0, -1, True, 2.0):
+        with pytest.raises(ValueError):
+            multihost.sharded_ingest(
+                summ, key, (10, 3, 3),
+                lambda lo, hi: (jnp.zeros((hi - lo, 3)),) * 2, chunk=bad)
+
+
+# ---------------------------------------------------------------------------
+# subprocess: hierarchical reduce on a 4-device emulated mesh
+
+
+@pytest.mark.dist
+def test_hierarchical_reduce_matches_flat_4dev():
+    """(host, device) 2x2 tree-reduce vs flat 4-way psum: squared-norm
+    blocks bit-exact, sketch blocks within reassociation tolerance — on a
+    probed + co-sketched + decayed stream over a ragged row count."""
+    from tests.dist.helpers import run_with_devices
+    out = run_with_devices("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro import core
+    from repro.dist import multihost
+
+    key = jax.random.PRNGKey(0)
+    d = 250                                # ragged: 250 % 4 != 0
+    A = jax.random.normal(key, (d, 12))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (d, 10))
+    summ = core.StreamingSummarizer(16, probes=4, cosketch=4, decay=0.97)
+
+    flat = Mesh(np.array(jax.devices()), ("shard",))
+    hier = multihost.host_mesh(2)          # 2 fake hosts x 2 devices
+    assert hier.devices.shape == (2, 2)
+
+    def run(mesh, axis):
+        st = summ.init(key, (d, 12, 10))
+        for off in range(0, d, 64):
+            st = core.distributed_streaming_update(
+                mesh, axis, summ, st, A[off:off + 64], B[off:off + 64],
+                row_offset=off)
+        return st
+
+    st_flat = run(flat, "shard")
+    st_hier = run(hier, ("host", "device"))
+
+    for name in ("na2", "nb2"):
+        fa, hi_ = getattr(st_flat, name), getattr(st_hier, name)
+        assert np.array_equal(np.asarray(fa), np.asarray(hi_)), name
+    for name in ("A_acc", "B_acc", "probe_acc", "cosketch_Y", "cosketch_W"):
+        fa = np.asarray(getattr(st_flat, name))
+        hi_ = np.asarray(getattr(st_hier, name))
+        scale = max(1.0, float(np.abs(fa).max()))
+        assert np.abs(fa - hi_).max() <= 1e-5 * scale, name
+    assert int(st_hier.rows_seen) == d
+
+    print("HIER_STREAM_OK", flush=True)
+    """, n_devices=4)
+    assert "HIER_STREAM_OK" in out
+
+
+@pytest.mark.dist
+def test_hierarchical_windowed_merge_matches_flat_4dev():
+    """A sliding window whose epochs were absorbed through the hierarchical
+    reduce merges to the same state as the flat-mesh window (norms
+    bit-exact)."""
+    from tests.dist.helpers import run_with_devices
+    out = run_with_devices("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro import core
+    from repro.dist import multihost
+
+    key = jax.random.PRNGKey(3)
+    ws = core.WindowedSummarizer(8, n_buckets=2, probes=4)
+    flat = Mesh(np.array(jax.devices()), ("shard",))
+    hier = multihost.host_mesh(2)
+
+    def run(mesh, axis):
+        w = ws.init(key, (60, 6, 5))
+        for epoch in range(3):
+            ek = jax.random.fold_in(key, 100 + epoch)
+            A = jax.random.normal(ek, (60, 6))
+            B = jax.random.normal(jax.random.fold_in(ek, 1), (60, 5))
+            slot = int(w.head) % ws.n_buckets
+            bucket = core.distributed_streaming_update(
+                mesh, axis, ws._inner, w.buckets[slot], A, B, 0)
+            w = ws._with_head_bucket(w, bucket)
+            if epoch < 2:
+                w = ws.slide(w)
+        return ws.merged(w)
+
+    m_flat = run(flat, "shard")
+    m_hier = run(hier, ("host", "device"))
+    assert np.array_equal(np.asarray(m_flat.na2), np.asarray(m_hier.na2))
+    assert np.array_equal(np.asarray(m_flat.nb2), np.asarray(m_hier.nb2))
+    diff = np.abs(np.asarray(m_flat.A_acc) - np.asarray(m_hier.A_acc)).max()
+    assert diff <= 1e-5
+    print("HIER_WINDOW_OK", flush=True)
+    """, n_devices=4)
+    assert "HIER_WINDOW_OK" in out
+
+
+@pytest.mark.dist
+def test_ragged_shard_bit_parity_with_padded_input():
+    """The zero-padded trailing shard gives the bitwise-identical summary
+    to manually padding the input to a shard multiple (both methods), and
+    stays close to the single-device reference."""
+    from tests.dist.helpers import run_with_devices
+    out = run_with_devices("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro import core
+
+    key = jax.random.PRNGKey(1)
+    d, k = 250, 16                          # 250 = 4*62 + 2: ragged
+    A = jax.random.normal(key, (d, 9))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (d, 7))
+    mesh = Mesh(np.array(jax.devices()), ("shard",))
+    pad = 252 - d
+    A_pad = jnp.pad(A, ((0, pad), (0, 0)))
+    B_pad = jnp.pad(B, ((0, pad), (0, 0)))
+
+    for method in ("gaussian", "srht"):
+        ragged = core.distributed_sketch_summary(
+            mesh, "shard", key, A, B, k, method=method)
+        # reference: same srht plan must come from the REAL d, so compare
+        # the gaussian path bitwise against pre-padded input
+        if method == "gaussian":
+            padded = core.distributed_sketch_summary(
+                mesh, "shard", key, A_pad, B_pad, k, method=method)
+            assert np.array_equal(np.asarray(ragged.A_sketch),
+                                  np.asarray(padded.A_sketch))
+            assert np.array_equal(np.asarray(ragged.B_sketch),
+                                  np.asarray(padded.B_sketch))
+        ref = core.build_summary(key, A, B, k, method=method,
+                                 backend="reference")
+        err = np.abs(np.asarray(ragged.A_sketch)
+                     - np.asarray(ref.A_sketch)).max()
+        assert err <= 1e-4, (method, err)
+        # zero padding must not leak into the norms
+        assert np.allclose(np.asarray(ragged.norm_A),
+                           np.asarray(ref.norm_A), rtol=1e-6)
+    print("RAGGED_OK", flush=True)
+    """, n_devices=4)
+    assert "RAGGED_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# subprocess: real 2-process jax.distributed cell
+
+
+@pytest.mark.dist
+def test_two_process_compressed_merge_cell():
+    """A real 2-process localhost cell: each process ingests its own host
+    shard, the merge travels as wire_pack bytes through the coordinator KV
+    store, and every process ends with the bit-identical merged state (f32
+    wire == the locally computed two-shard merge)."""
+    from tests.dist.helpers import run_multiprocess
+    outs = run_multiprocess("""
+    import hashlib
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import core
+    from repro.dist import multihost
+
+    assert multihost.initialize() is True
+    pid, nproc = multihost.process_topology()
+    assert nproc == 2
+
+    key = jax.random.PRNGKey(7)
+    d, na, nb = 90, 8, 6
+    A = jax.random.normal(key, (d, na))              # same data every proc
+    B = jax.random.normal(jax.random.fold_in(key, 1), (d, nb))
+    summ = core.StreamingSummarizer(12, probes=4, cosketch=4)
+
+    merged = multihost.sharded_ingest(
+        summ, key, (d, na, nb),
+        lambda lo, hi: (A[lo:hi], B[lo:hi]), chunk=16)
+
+    # every proc can rebuild both partials locally: the f32-wire merge must
+    # equal the local tree_merge of them, bitwise
+    parts = []
+    for h in range(nproc):
+        lo, hi = multihost.host_shard_range(d, hosts=nproc, host=h)
+        st = summ.init(key, (d, na, nb))
+        for off in range(lo, hi, 16):
+            st = summ.update(st, A[off:min(off+16, hi)],
+                             B[off:min(off+16, hi)], off)
+        parts.append(st)
+    expect = core.tree_merge(parts)
+    assert int(merged.rows_seen) == d
+    for a, b in zip(jax.tree_util.tree_leaves(merged),
+                    jax.tree_util.tree_leaves(expect)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # conservative spec voting: pid 0 votes f32, pid 1 votes int8 -> the
+    # cell settles on f32 and the result stays the bitwise f32 merge
+    voted = multihost.cross_host_merge(
+        parts[pid], wire=("f32" if pid == 0 else "int8"))
+    assert np.array_equal(np.asarray(voted.A_acc), np.asarray(merged.A_acc))
+
+    # bf16 wire: norm blocks ride f32 (bit-exact), sketch blocks within
+    # the probe-measured quantisation tolerance
+    lossy = multihost.cross_host_merge(parts[pid], wire="bf16")
+    assert np.array_equal(np.asarray(lossy.na2), np.asarray(merged.na2))
+    rel = (np.abs(np.asarray(lossy.A_acc) - np.asarray(merged.A_acc)).max()
+           / np.abs(np.asarray(merged.A_acc)).max())
+    assert 0 < rel <= 2e-2, rel
+
+    digest = hashlib.sha256(
+        np.ascontiguousarray(np.asarray(merged.A_acc)).tobytes()).hexdigest()
+    print("MULTIHOST_OK", digest, flush=True)
+    """, n_procs=2)
+    lines = [ln for out in outs for ln in out.splitlines()
+             if ln.startswith("MULTIHOST_OK")]
+    assert len(lines) == 2
+    assert lines[0] == lines[1]        # bit-identical merge on every host

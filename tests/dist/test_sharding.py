@@ -1,0 +1,79 @@
+"""Path-based sharding rules, in-process.
+
+``param_spec`` / ``cache_spec`` only read ``mesh.shape``, so the rule
+table — including every divisibility fallback — is checkable without
+spawning a multi-device subprocess; the ``*_shardings`` tree walkers run
+on a real 1x1 mesh.
+"""
+import types
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding
+
+
+def _mesh_shape(data=4, model=2):
+    # param_spec/cache_spec duck-type the mesh: only .shape is read
+    return types.SimpleNamespace(shape={"data": data, "model": model})
+
+
+def test_param_spec_fsdp_tp_weight():
+    mesh = _mesh_shape()
+    assert sharding.param_spec(mesh, "/mlp/up/w", (8, 6)) == \
+        P(("data",), "model")
+
+
+def test_param_spec_divisibility_fallbacks():
+    mesh = _mesh_shape(data=4, model=16)
+    # 12 heads do not divide a 16-way model axis: d_out replicated
+    assert sharding.param_spec(mesh, "/attn/wq/w", (8, 12)) == \
+        P(("data",), None)
+    # d_in not divisible by dp either: fully replicated
+    assert sharding.param_spec(mesh, "/attn/wq/w", (6, 12)) == P(None, None)
+
+
+def test_param_spec_bias_and_stacked_dims():
+    mesh = _mesh_shape()
+    assert sharding.param_spec(mesh, "/mlp/up/b", (6,)) == P(None)
+    # stacked layer-group leading dim stays unsharded
+    assert sharding.param_spec(mesh, "/groups/0/0/mlp/up/w", (3, 8, 6)) == \
+        P(None, ("data",), "model")
+
+
+def test_param_spec_embed_is_vocab_tp_dmodel_dp():
+    mesh = _mesh_shape()
+    assert sharding.param_spec(mesh, "/embed/table", (10, 8)) == \
+        P("model", ("data",))
+    # ragged vocab replicates the vocab dim only
+    assert sharding.param_spec(mesh, "/embed/table", (11, 8)) == \
+        P(None, ("data",))
+
+
+def test_cache_spec_prefers_kv_heads_then_head_dim():
+    mesh = _mesh_shape(data=2, model=4)
+    # (B, S, KV, Dh): KV=8 divides model=4 -> KV takes TP
+    assert sharding.cache_spec(mesh, "/cache/k", (4, 16, 8, 6)) == \
+        P(("data",), None, "model", None)
+    # KV=3 ragged -> falls back to head_dim
+    assert sharding.cache_spec(mesh, "/cache/k", (4, 16, 3, 8)) == \
+        P(("data",), None, None, "model")
+
+
+def test_tree_walkers_build_namedshardings_on_real_mesh():
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shapes = {"mlp": {"up": {"w": jax.ShapeDtypeStruct((8, 6), np.float32)}}}
+    out = sharding.params_shardings(mesh, shapes)
+    sh = out["mlp"]["up"]["w"]
+    assert isinstance(sh, NamedSharding) and sh.mesh is mesh
+    cache = {"k": jax.ShapeDtypeStruct((2, 4, 2, 2), np.float32)}
+    csh = sharding.cache_shardings(mesh, cache)["k"]
+    assert isinstance(csh, NamedSharding)
+
+
+@pytest.mark.parametrize("axes,expect", [("data", 4), (("data", "model"), 8)])
+def test_axes_size_accepts_str_or_tuple(axes, expect):
+    assert sharding._axes_size(_mesh_shape(data=4, model=2), axes) == expect

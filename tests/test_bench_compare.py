@@ -121,6 +121,23 @@ def test_ci_runs_traffic_smoke_and_bench_compare():
     assert "--cov=repro.ckpt" in ci
 
 
+def test_ci_runs_ingest_smoke_and_dist_lane():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "--suite ingest --smoke" in ci
+    assert "BENCH_ingest.json" in ci
+    assert "--cov=repro.dist" in ci
+    # the dist lane emulates 4 devices and selects only dist-marked tests
+    assert "--xla_force_host_platform_device_count=4" in ci
+    assert "-m dist" in ci
+    # pytest's default norecursedirs hides tests/dist/ — the override that
+    # keeps the multi-host suite collectable from the repo root must stay
+    import re
+    toml = (REPO / "pyproject.toml").read_text()
+    m = re.search(r"^norecursedirs\s*=\s*(\[.*?\])", toml, re.M)
+    assert m, "pyproject must override pytest's default norecursedirs"
+    assert '"dist"' not in m.group(1)
+
+
 def test_drift_tracking_error_is_gated_lower_is_better():
     # the streaming suite's drift cells report tracking_error; a rise past
     # the threshold must annotate, a drop must stay silent
@@ -130,5 +147,32 @@ def test_drift_tracking_error_is_gated_lower_is_better():
     cur = _report(**{"drift/window2": dict(tracking_error=0.6)})
     warnings, _ = mod.compare(base, cur, 0.2)
     assert len(warnings) == 1 and "tracking_error rose 50%" in warnings[0]
+    warnings, _ = mod.compare(cur, base, 0.2)   # improvement: silent
+    assert warnings == []
+
+
+def test_ingest_throughput_is_gated_higher_is_better():
+    # the ingest suite's overlap cells report chunks_per_sec; a drop past
+    # the threshold must annotate, a rise must stay silent
+    mod = _load()
+    assert mod.TRACKED["chunks_per_sec"] is False
+    assert mod.TRACKED["achieved_gbps"] is False
+    base = _report(**{"ingest/prefetch2": dict(chunks_per_sec=200.0)})
+    cur = _report(**{"ingest/prefetch2": dict(chunks_per_sec=120.0)})
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 1 and "chunks_per_sec fell" in warnings[0]
+    warnings, _ = mod.compare(cur, base, 0.2)   # improvement: silent
+    assert warnings == []
+
+
+def test_wire_bytes_per_state_is_gated_lower_is_better():
+    # compressed-wire cells report wire_bytes_per_state; growth past the
+    # threshold (a fatter wire format) must annotate, shrinkage is silent
+    mod = _load()
+    assert mod.TRACKED["wire_bytes_per_state"] is True
+    base = _report(**{"wire/bf16": dict(wire_bytes_per_state=1000.0)})
+    cur = _report(**{"wire/bf16": dict(wire_bytes_per_state=1500.0)})
+    warnings, _ = mod.compare(base, cur, 0.2)
+    assert len(warnings) == 1 and "wire_bytes_per_state rose 50%" in warnings[0]
     warnings, _ = mod.compare(cur, base, 0.2)   # improvement: silent
     assert warnings == []

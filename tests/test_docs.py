@@ -49,3 +49,13 @@ def test_scheduler_doctests_are_wired_into_docs_gate():
     mod = _load_check_docs()
     assert "repro.serve.scheduler" in mod.DOCTEST_MODULES
     assert "repro.kernels.tuning" in mod.DOCTEST_MODULES
+    assert "repro.dist.multihost" in mod.DOCTEST_MODULES
+
+
+def test_streaming_doc_covers_scale_out_ingest():
+    doc = (REPO / "docs" / "streaming.md").read_text()
+    assert "## Scale-out ingest" in doc
+    assert "cross_host_merge" in doc
+    assert "choose_wire_spec" in doc
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    assert "streaming.md#scale-out-ingest" in arch

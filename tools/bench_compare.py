@@ -45,6 +45,8 @@ TRACKED = {
     "achieved_gbps": False,
     "tracking_error": True,     # drift cells in BENCH_streaming.json
     "spectral_error": True,     # estimation/refinement cells — accuracy gate
+    "chunks_per_sec": False,    # ingest overlap cells in BENCH_ingest.json
+    "wire_bytes_per_state": True,   # compressed-wire cells — size gate
 }
 
 

@@ -29,6 +29,7 @@ DOCTEST_MODULES = (
     "repro.core.refinement",
     "repro.core.pipeline",
     "repro.core.streaming",
+    "repro.dist.multihost",
     "repro.serve.engine",
     "repro.serve.scheduler",
     "repro.kernels.tuning",
